@@ -1,0 +1,99 @@
+"""Paper Tables V-VIII + Fig 4 — COMPREDICT prediction quality.
+
+V    : training-data (random vs queries) x features (size vs weighted
+       entropy) ablation, gzip-class codec;
+VI   : compression-ratio prediction, models x schemes x layouts (TPC-H 1GB);
+VII  : ratio prediction on larger/skewed TPC-H;
+VIII : decompression-speed prediction.
+"""
+
+import numpy as np
+
+from benchmarks.common import emit, row, timed
+from repro.core.compredict import (build_dataset, query_samples,
+                                   random_samples, train_eval)
+from repro.data import tpch
+from repro.storage.codecs import codec_by_name
+
+SCHEMES_V1 = [("zlib-6", "row"), ("zstd-3", "row"), ("zlib-6", "col"),
+              ("zstd-3", "col"), ("lzma-1", "col")]
+MODELS = ["Averaging", "XGBoostless", "NeuralNetwork", "SVR", "RandomForest"]
+
+
+def _mk_samples(scale_rows, skew, seed, n_per_template=8):
+    db = tpch.generate(scale_rows=scale_rows, skew=skew, seed=seed)
+    qs = tpch.generate_queries(db, n_per_template=n_per_template,
+                               seed=seed + 1)
+    return db, qs, query_samples(qs, db.tables, max_rows=1500)
+
+
+def run():
+    rows = []
+    db, qs, samples = _mk_samples(5000, 0.0, 0)
+
+    # ---- Table V: sampling x features (gzip ~ zlib-6, row layout)
+    codec = codec_by_name("zlib-6")
+    rand = random_samples(db.tables["lineitem"], 60, 900, seed=3)
+    for train_data, samp in (("random", rand), ("queries", samples)):
+        for feats in ("size", "weighted_entropy"):
+            if train_data == "random" and feats == "size":
+                continue
+            for target in ("ratio", "dspeed"):
+                ds = build_dataset(samp, codec, "row", feats)
+                (_, res), us = timed(
+                    lambda d=ds, t=target: train_eval(d, "RandomForest", t),
+                    repeats=1)
+                rows.append(row(
+                    f"tableV/{train_data}/{feats}/{target}", us,
+                    mae=round(res.mae, 4), mape=round(res.mape, 3),
+                    r2=round(res.r2, 4)))
+
+    # ---- Fig 4: query samples compress better than random rows
+    ds_q = build_dataset(query_samples(
+        [q for q in qs if q.table == "lineitem"], db.tables, 900),
+        codec, "row")
+    ds_r = build_dataset(rand, codec, "row")
+    rows.append(row("fig4/ratio_mean", 0,
+                    queries=round(float(ds_q.ratio.mean()), 3),
+                    random=round(float(ds_r.ratio.mean()), 3)))
+
+    # ---- Table VI: models x schemes x layouts, ratio (TPC-H '1GB')
+    for scheme, layout in SCHEMES_V1:
+        ds = build_dataset(samples, codec_by_name(scheme), layout)
+        for model in ("Averaging", "NeuralNetwork", "SVR", "RandomForest"):
+            (_, res), us = timed(
+                lambda d=ds, m=model: train_eval(d, m, "ratio"), repeats=1)
+            rows.append(row(f"tableVI/{scheme}+{layout}/{model}", us,
+                            mae=round(res.mae, 4), mape=round(res.mape, 3),
+                            r2=round(res.r2, 4)))
+
+    # ---- Table VII: '100GB' (larger scale) + Zipf-skew variants
+    for tag, (scale, skew) in (("100GB", (20000, 0.0)),
+                               ("Skew", (5000, 1.2))):
+        _, _, samp = _mk_samples(scale, skew, seed=11, n_per_template=6)
+        for scheme, layout in (("zlib-6", "row"), ("zlib-6", "col")):
+            ds = build_dataset(samp, codec_by_name(scheme), layout)
+            for model in ("Averaging", "SVR", "RandomForest"):
+                (_, res), us = timed(
+                    lambda d=ds, m=model: train_eval(d, m, "ratio"),
+                    repeats=1)
+                rows.append(row(
+                    f"tableVII/{tag}/{scheme}+{layout}/{model}", us,
+                    mae=round(res.mae, 4), mape=round(res.mape, 3),
+                    r2=round(res.r2, 4)))
+
+    # ---- Table VIII: decompression sec/GB prediction
+    for scheme, layout in (("zlib-6", "row"), ("zlib-6", "col"),
+                           ("lzma-1", "col")):
+        ds = build_dataset(samples, codec_by_name(scheme), layout)
+        for model in ("Averaging", "SVR", "RandomForest"):
+            (_, res), us = timed(
+                lambda d=ds, m=model: train_eval(d, m, "dspeed"), repeats=1)
+            rows.append(row(f"tableVIII/{scheme}+{layout}/{model}", us,
+                            mae=round(res.mae, 4), mape=round(res.mape, 3),
+                            r2=round(res.r2, 4)))
+    return emit(rows, "tablesV-VIII_compredict")
+
+
+if __name__ == "__main__":
+    run()

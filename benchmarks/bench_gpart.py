@@ -1,0 +1,67 @@
+"""Paper Fig 7 — G-PART space/cost trade-off vs no-merge and merge-all,
+plus the ordered-partition DP (Thms 5/6) vs G-PART on time-series data."""
+
+import numpy as np
+
+from benchmarks.common import emit, row, timed
+from repro.core import datapart as dp
+from repro.data import tpch
+
+
+def _partitions(scale_rows, seed):
+    db = tpch.generate(scale_rows=scale_rows, seed=seed)
+    qs = tpch.generate_queries(db, n_per_template=6, seed=seed + 1)
+    parts, _ = tpch.partitions_from_queries(db, qs)
+    return parts
+
+
+def run():
+    rows = []
+    for tag, scale in (("1GB", 4000), ("100GB", 16000)):
+        parts = _partitions(scale, 0)
+        total_span = parts[0].sizes.span(
+            frozenset().union(*[p.files for p in parts]))
+        merged, us = timed(lambda p=parts, t=total_span: dp.g_part(
+            list(p), s_thresh=0.25 * t), repeats=1)
+        allm = dp.merge_all(parts)
+        for name, ps in (("no_merge", parts), ("g_part", merged),
+                         ("merge_all", allm)):
+            rows.append(row(
+                f"fig7/{tag}/{name}", us if name == "g_part" else 0,
+                n_partitions=len(ps),
+                duplication=round(dp.duplication(ps), 4),
+                read_cost=round(dp.read_cost(ps) / 1e9, 4)))
+
+    # ordered/time-series case: DP optimal vs G-PART heuristic
+    rng = np.random.default_rng(5)
+    files = {f"t{i}": float(rng.uniform(0.5, 2.0)) for i in range(40)}
+    sizes = dp.FileSizes(files)
+    parts = []
+    for i in range(30):
+        w = int(rng.integers(2, 6))
+        parts.append(dp.Partition(
+            frozenset(f"t{j}" for j in range(i, min(i + w, 40))),
+            float(rng.uniform(0.5, 4.0)), sizes))
+    c_budget = dp.read_cost(parts) * 1.3
+    sol, us_dp = timed(lambda: dp.ordered_dp(parts, c_budget, n_buckets=400),
+                       repeats=1)
+    gp, us_gp = timed(lambda: dp.g_part(list(parts), s_thresh=20.0),
+                      repeats=1)
+    rows.append(row("thm5/ordered_dp", us_dp,
+                    space=round(sol.space, 3), cost=round(sol.cost, 3),
+                    budget=round(c_budget, 3), groups=len(sol.groups)))
+    rows.append(row("thm5/g_part_on_ordered", us_gp,
+                    space=round(sum(p.span for p in gp), 3),
+                    cost=round(dp.read_cost(gp), 3), groups=len(gp)))
+    approx, us_a = timed(lambda: dp.ordered_approx(parts, c_budget,
+                                                   eps=1.0 / len(parts)),
+                         repeats=1)
+    rows.append(row("thm6/bicriteria_approx", us_a,
+                    space=round(approx.space, 3),
+                    cost=round(approx.cost, 3),
+                    cost_bound=round(2 * c_budget, 3)))
+    return emit(rows, "fig7_gpart")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Framework micro-benchmarks: kernel ref-path timings on CPU (wall time is
+NOT the deliverable metric — TPU roofline comes from the dry-run — but these
+catch algorithmic regressions and give the us_per_call CSV column teeth)."""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, row, timed
+from repro.kernels import ops
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention ref (train shape slice)
+    q = jax.random.normal(key, (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="ref"))
+    f(q, k, v).block_until_ready()
+    _, us = timed(lambda: f(q, k, v).block_until_ready(), repeats=3)
+    flops = 4 * 1024 * 1024 * 8 * 64
+    rows.append(row("kernel/flash_attention_ref_1k", us,
+                    gflops_cpu=round(flops / us / 1e3, 2)))
+
+    # decode attention (32k cache)
+    q1 = jax.random.normal(key, (4, 8, 64), jnp.float32)
+    kc = jax.random.normal(key, (4, 32768, 2, 64), jnp.float32)
+    kv_len = jnp.full((4,), 32768, jnp.int32)
+    d = jax.jit(lambda q, k, v, l: ops.decode_attention(q, k, v, l,
+                                                        impl="ref"))
+    d(q1, kc, kc, kv_len).block_until_ready()
+    _, us = timed(lambda: d(q1, kc, kc, kv_len).block_until_ready())
+    gb = 2 * kc.size * 4 / 1e9
+    rows.append(row("kernel/decode_attention_ref_32k", us,
+                    cache_gb=round(gb, 3),
+                    gbps_cpu=round(gb / (us / 1e6), 2)))
+
+    # SSD scan
+    x = jax.random.normal(key, (2, 2048, 8, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 2048, 8))) * 0.5
+    A = -jnp.exp(jax.random.normal(key, (8,)) * 0.3)
+    B = jax.random.normal(key, (2, 2048, 1, 64)) * 0.5
+    C = jax.random.normal(key, (2, 2048, 1, 64)) * 0.5
+    s = jax.jit(lambda *a: ops.ssd_scan(*a, impl="ref")[0])
+    s(x, dt, A, B, C).block_until_ready()
+    _, us = timed(lambda: s(x, dt, A, B, C).block_until_ready())
+    rows.append(row("kernel/ssd_scan_ref_2k", us,
+                    tokens_per_s=round(2 * 2048 / (us / 1e6), 0)))
+
+    # quant pack/unpack roundtrip
+    w = jax.random.normal(key, (1024, 1024), jnp.float32)
+    qp = jax.jit(lambda w: ops.quant_pack(w, impl="ref"))
+    qp(w)[0].block_until_ready()
+    _, us = timed(lambda: qp(w)[0].block_until_ready())
+    rows.append(row("kernel/quant_pack_1M", us,
+                    gbps_cpu=round(w.size * 4 / 1e9 / (us / 1e6), 2)))
+
+    # byte entropy (COMPREDICT feature hot loop)
+    data = jax.random.randint(key, (1 << 20,), 0, 256, jnp.int32
+                              ).astype(jnp.uint8)
+    be = jax.jit(lambda d: ops.byte_entropy(d, impl="ref")[1])
+    be(data).block_until_ready()
+    _, us = timed(lambda: be(data).block_until_ready())
+    rows.append(row("kernel/byte_entropy_1MB", us,
+                    mbps_cpu=round(1.0 / (us / 1e6), 1)))
+    return emit(rows, "kernels_micro")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Deliverable (g) — roofline table assembled from dry-run artifacts
+(benchmarks/results/dryrun/*.json). Run the dry-run sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import json
+import pathlib
+
+from benchmarks.common import emit, row
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def run():
+    rows = []
+    if not DRYRUN.exists():
+        print("no dry-run results yet — run repro.launch.dryrun first")
+        return emit(rows, "roofline")
+    for path in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(path.read_text())
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            rows.append(row(name, 0, status="skipped",
+                            reason=rec.get("reason", "")[:60]))
+            continue
+        if rec.get("status") != "ok":
+            rows.append(row(name, 0, status=rec.get("status"),
+                            error=rec.get("error", "")[:80]))
+            continue
+        r = rec["roofline"]
+        rows.append(row(
+            name, rec.get("compile_s", 0) * 1e6,
+            compute_s=round(r["compute_s"], 5),
+            memory_s=round(r["memory_s"], 5),
+            collective_s=round(r["collective_s"], 5),
+            dominant=r["dominant"],
+            useful_ratio=(round(r["useful_ratio"], 3)
+                          if r.get("useful_ratio") else None),
+            temp_gb_per_dev=round(
+                rec["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9, 2),
+        ))
+    return emit(rows, "roofline")
+
+
+if __name__ == "__main__":
+    run()

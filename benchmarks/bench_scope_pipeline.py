@@ -1,0 +1,58 @@
+"""Paper Tables IX-XI — the full SCOPe pipeline vs adapted baselines
+(Ares / Hermes / HCompress rows) on TPC-H-style data, and Fig 5 — effect of
+the compression predictor on the cost/latency trade-off."""
+
+import numpy as np
+
+from benchmarks.common import emit, row, timed
+from repro.core.compredict import CompressionPredictor, query_samples
+from repro.core.costs import Weights, azure_table
+from repro.core.scope import ScopeConfig, paper_variants, run_pipeline
+from repro.data import tpch
+
+
+def run():
+    rows = []
+    table = azure_table()
+    db = tpch.generate(scale_rows=8000, seed=0)
+    qs = tpch.generate_queries(db, n_per_template=5, seed=1)
+    parts, file_rows = tpch.partitions_from_queries(db, qs)
+    total_gb = sum(p.span for p in parts) / 1e9
+    cap = np.array([0.163, 0.326, 0.4891, np.inf]) * total_gb * 3.0
+
+    for name, cfg in paper_variants(cap).items():
+        rep, us = timed(lambda c=cfg: run_pipeline(parts, file_rows, table,
+                                                   c), repeats=1)
+        rows.append(row(f"tableX/{name}", us,
+                        storage=round(rep.storage_cents, 4),
+                        decomp=round(rep.decomp_cents, 5),
+                        read=round(rep.read_cents, 4),
+                        total=round(rep.total_cents, 4),
+                        ttfb_s=round(rep.read_latency_ttfb, 4),
+                        decomp_ms=round(rep.decomp_latency_ms, 4),
+                        tiers=rep.tiering_scheme,
+                        n_partitions=rep.n_partitions))
+
+    # ---- Fig 5: predictor-in-the-loop vs ground truth vs naive predictor
+    samples = query_samples(qs, db.tables, max_rows=6000)
+    pred = CompressionPredictor(model_name="SVR").fit(
+        samples[:80], layouts=("col",))
+    pred_avg = CompressionPredictor(model_name="Averaging").fit(
+        samples[:80], layouts=("col",))
+    for tag, predictor in (("truth", "truth"), ("svr", pred),
+                           ("averaging", pred_avg)):
+        for alpha, beta in ((1.0, 1.0), (1.0, 4.0), (4.0, 1.0)):
+            cfg = ScopeConfig(weights=Weights(alpha=alpha, beta=beta),
+                              tier_whitelist=(0, 1, 2), predictor=predictor)
+            rep, us = timed(lambda c=cfg: run_pipeline(
+                parts, file_rows, table, c), repeats=1)
+            rows.append(row(f"fig5/{tag}/a{alpha}b{beta}", us,
+                            total=round(rep.total_cents, 4),
+                            storage=round(rep.storage_cents, 4),
+                            latency_s=round(rep.read_latency_ttfb
+                                            + rep.decomp_latency_ms / 1e3, 4)))
+    return emit(rows, "tablesIX-XI_scope_pipeline")
+
+
+if __name__ == "__main__":
+    run()

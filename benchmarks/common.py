@@ -1,0 +1,34 @@
+"""Shared benchmark plumbing: timing + CSV/JSON row emission."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Dict, List
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """(result, best_us)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
+
+
+def row(name: str, us: float, **derived) -> Dict:
+    return {"name": name, "us_per_call": round(us, 1), "derived": derived}
+
+
+def emit(rows: List[Dict], table_name: str) -> List[Dict]:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{table_name}.json").write_text(json.dumps(rows, indent=1))
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},"
+              f"{json.dumps(r['derived'], sort_keys=True)}")
+    return rows

@@ -1,0 +1,30 @@
+"""§Perf before/after: baseline vs optimized dry-run roofline terms."""
+import json, pathlib, sys
+
+BASE = pathlib.Path("benchmarks/results/dryrun_baseline")
+OPT = pathlib.Path("benchmarks/results/dryrun")
+
+def main():
+    print("| arch | shape | mesh | term | before (s) | after (s) | delta |")
+    print("|---|---|---|---|---|---|---|")
+    for jp in sorted(OPT.glob("*.json")):
+        new = json.loads(jp.read_text())
+        bp = BASE / jp.name
+        if not bp.exists() or new.get("status") != "ok":
+            continue
+        old = json.loads(bp.read_text())
+        if old.get("status") != "ok":
+            continue
+        ro, rn = old["roofline"], new["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            a, b = ro[term], rn[term]
+            if a < 1e-4 and b < 1e-4:
+                continue
+            if abs(b - a) / max(a, 1e-9) < 0.02:
+                continue
+            print(f"| {new['arch']} | {new['shape']} | {new['mesh']} "
+                  f"| {term[:-2]} | {a:.4f} | {b:.4f} "
+                  f"| {'-' if b<a else '+'}{abs(b-a)/max(a,1e-12)*100:.0f}% |")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Recompute roofline terms from stored dry-run HLO (analyzer fixes apply
+retroactively — lowering/compile need not rerun)."""
+import json, pathlib, sys
+import zstandard as zstd
+from repro.analysis import roofline as rl
+
+d = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else
+                 "benchmarks/results/dryrun")
+for jp in sorted(d.glob("*.json")):
+    rec = json.loads(jp.read_text())
+    if rec.get("status") != "ok":
+        continue
+    hp = jp.with_suffix("").with_suffix("")  # strip .json
+    hp = d / (jp.stem + ".hlo.zst")
+    if not hp.exists():
+        continue
+    hlo = zstd.ZstdDecompressor().decompress(hp.read_bytes()).decode()
+    roof = rl.roofline_terms({}, hlo, rec["chips"],
+                             rec["roofline"].get("model_flops"))
+    rec["roofline"] = roof.as_dict()
+    rec["collective_bytes"] = rl.collective_bytes(hlo)
+    jp.write_text(json.dumps(rec, indent=1))
+    print(f"reanalyzed {jp.name}: dominant={roof.dominant} "
+          f"c={roof.compute_s:.4f} m={roof.memory_s:.4f} x={roof.collective_s:.4f}")

@@ -1,0 +1,75 @@
+"""Render the §Dry-run / §Roofline markdown tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.render_roofline [--mesh pod16x16]
+"""
+
+import argparse
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+import os
+if os.environ.get("DRYRUN_DIR"):
+    DRYRUN = pathlib.Path(os.environ["DRYRUN_DIR"])
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.2f}M"
+    return f"{b/1e3:.1f}K"
+
+
+def load(mesh):
+    recs = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def render(mesh: str, full: bool = True) -> str:
+    rows = []
+    head = ("| arch | shape | status | compute_s | memory_s | collective_s | "
+            "dominant | useful 6ND/HLO | HLO flops/dev | HBM/dev | coll/dev | "
+            "temp GB/dev | compile_s |")
+    sep = "|" + "---|" * 13
+    rows.append(head)
+    rows.append(sep)
+    for r in load(mesh):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}…) "
+                        + "| — " * 10 + "|")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR "
+                        + "| — " * 10 + "|")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok "
+            f"| {ro['compute_s']:.4f} | {ro['memory_s']:.4f} "
+            f"| {ro['collective_s']:.4f} | **{ro['dominant']}** "
+            f"| {ro['useful_ratio']:.2f} "
+            f"| {fmt_bytes(ro['flops'])} | {fmt_bytes(ro['hbm_bytes'])}B "
+            f"| {fmt_bytes(ro['coll_bytes'])}B "
+            f"| {r['memory_analysis'].get('temp_size_in_bytes', 0)/1e9:.1f} "
+            f"| {r.get('compile_s', 0):.0f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16",
+                    choices=["pod16x16", "pod2x16x16", "both"])
+    args = ap.parse_args()
+    meshes = ["pod16x16", "pod2x16x16"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        print(f"\n### mesh {m}\n")
+        print(render(m))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark entry point — one module per paper table/figure + framework
+micro/roofline benches. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableII,fig7,...]
+"""
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("tableII", "benchmarks.bench_optassign_enterprise"),
+    ("tableIII", "benchmarks.bench_access_predict"),
+    ("tableIV", "benchmarks.bench_optassign_baselines"),
+    ("tablesV-VIII", "benchmarks.bench_compredict"),
+    ("fig7", "benchmarks.bench_gpart"),
+    ("tablesIX-XI", "benchmarks.bench_scope_pipeline"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated tags (e.g. tableII,fig7)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = []
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            failures.append((tag, repr(e)))
+            print(f"{tag}/FAILED,0,{{\"error\": \"{e}\"}}")
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

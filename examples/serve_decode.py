@@ -1,0 +1,60 @@
+"""Serving example: prefill + batched greedy decode with a KV cache
+(yi-9b smoke-size on CPU; identical code path lowers on the production
+mesh via launch/dryrun decode cells).
+
+    PYTHONPATH=src python examples/serve_decode.py --tokens 24 --batch 4
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.models import transformer as tr
+from repro.serving.decode import make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = tr.init_params(jax.random.PRNGKey(0), cfg)
+    B = args.batch
+    max_seq = args.prompt_len + args.tokens + 1
+    cache = tr.init_cache(cfg, B, max_seq=max_seq)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (B, args.prompt_len), 0, cfg.vocab_size)
+    step = make_decode_step(cfg)
+
+    # prefill by stepping the prompt (cache-writing prefill fuses this on TPU)
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = step(params, cache, prompts[:, i:i + 1],
+                             jnp.full((B,), i, jnp.int32))
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    out = [tok]
+    for j in range(args.tokens - 1):
+        logits, cache = step(params, cache, tok,
+                             jnp.full((B,), args.prompt_len + j, jnp.int32))
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    total = B * args.tokens
+    print(f"arch={cfg.name} (smoke) batch={B}")
+    print(f"generated {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s on CPU)")
+    print("sample token ids:", gen[0, :16].tolist())
+    assert bool(jnp.isfinite(logits).all())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Optimized-HLO static analyzer: FLOPs / HBM bytes / collective bytes with
+correct while-loop trip-count multiplication.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits a while
+body ONCE, so scanned-layer models (all of ours — stages are lax.scan'd)
+under-count flops/bytes by ~n_layers. This module parses the post-SPMD
+optimized HLO text into its computation graph and evaluates
+
+    total(entry),  where  while -> trip_count x (body + cond)
+                          fusion/call/to_apply -> callee (flops only;
+                          bytes count at the call site: operands + result,
+                          matching HloCostAnalysis fusion semantics)
+
+FLOPs counted for dot ops (2 * prod(result_dims) * contraction), the only
+material compute in these models; elementwise flops are ignored (sub-1%).
+Collective operand bytes are derived from result shape and replica-group
+size per kind (operands are printed without types in this dialect).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\](?:\{[^}]*\})?")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+
+# Ops whose bytes we count (TPU-fusion-adjusted semantics): matmuls,
+# fusions, slices/cache-updates (aliased: only the moved window counts),
+# collectives and opaque calls. Everything elementwise / layout-only is
+# treated as fused away (XLA:TPU does; XLA:CPU leaves them unfused, which
+# would inflate the memory term ~40x — see DESIGN.md §7).
+_BYTE_OPS = {"dot", "fusion", "custom-call", "reduce", "reduce-window",
+             "convolution", "scatter", "gather", "sort", "cholesky",
+             "triangular-solve"}
+_WINDOW_OPS = {"dynamic-update-slice": 1, "dynamic-slice": -1,
+               "slice": -1, "pad": -1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(m.group(1),
+             [int(d) for d in m.group(2).split(",")] if m.group(2) else [])
+            for m in _SHAPE_RE.finditer(type_str)]
+
+
+def _shape_bytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_shapes: List[Tuple[str, List[int]]]
+    operands: List[str]
+    attrs: str
+    raw: str = ""
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    symbols: Dict[str, List[Tuple[str, List[int]]]]
+
+
+def _split_args(arg_str: str) -> Tuple[List[str], str]:
+    """Split the call-paren contents into operand names + trailing attrs."""
+    depth = 0
+    end = None
+    for i, ch in enumerate(arg_str):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if depth == 0:
+                end = i
+                break
+            depth -= 1
+    if end is None:
+        end = len(arg_str)
+    inner, attrs = arg_str[:end], arg_str[end + 1:]
+    names = re.findall(r"%([\w.\-]+)", inner)
+    return names, attrs
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    entry = None
+    cur: Optional[_Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{?\s*$", line)
+            if line.endswith("{") and ("(" in line):
+                m2 = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+                if m2:
+                    cur = _Computation(m2.group(2), [], {})
+                    if m2.group(1):
+                        entry = m2.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, kind, rest = m.groups()
+        operands, attrs = _split_args(rest)
+        op = _Op(name, kind, _parse_shapes(type_str), operands, attrs, rest)
+        cur.ops.append(op)
+        cur.symbols[name] = op.result_shapes
+    if cur is not None:
+        comps[cur.name] = cur
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _group_size(attrs: str, default: int = 1) -> int:
+    # replica_groups=[2,4]<=[8]  -> groups of 4;   {{0,1},{2,3}} -> 2
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    n_collectives: int = 0
+
+    def add(self, other: "HloStats", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        self.coll_bytes += mult * other.coll_bytes
+        self.n_collectives += int(mult * other.n_collectives)
+        for k in COLLECTIVES:
+            self.coll_by_kind[k] += mult * other.coll_by_kind[k]
+
+
+def _called(attrs: str, key: str) -> List[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    if m:
+        return [m.group(1)]
+    m = re.search(key + r"=\{([^}]*)\}", attrs)
+    if m:
+        return re.findall(r"%?([\w.\-]+)", m.group(1))
+    return []
+
+
+def trip_count(cond: _Computation) -> int:
+    """Loop bound from the condition's compare-with-constant. The compare is
+    often fusion-wrapped (kLoop '%wrapped_compare'), so accept a constant
+    operand of the root compare OR of a root fusion; fall back to the max
+    positive constant in the (tiny) condition computation."""
+    consts = {}
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.match(r"\s*(-?\d+)\s*\)", op.raw)
+            if m:
+                consts[op.name] = int(m.group(1))
+    best = 0
+    for op in cond.ops:
+        if op.kind in ("compare", "fusion"):
+            for o in op.operands:
+                if o in consts and consts[o] > best:
+                    best = consts[o]
+    if best == 0 and consts:
+        best = max(v for v in consts.values())
+    return max(best, 1)
+
+
+def analyze(hlo_text: str) -> HloStats:
+    comps, entry = parse_module(hlo_text)
+    memo: Dict[str, HloStats] = {}
+    # computations reached via fusion calls: bytes are call-site-only
+    fused: set = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind == "fusion":
+                for callee in _called(op.attrs, "calls"):
+                    fused.add(callee)
+
+    def flops_only(cname: str, seen=()) -> float:
+        """dot flops inside fused computations (rare on CPU, cheap to cover)."""
+        c = comps.get(cname)
+        if c is None or cname in seen:
+            return 0.0
+        total = 0.0
+        for op in c.ops:
+            if op.kind == "dot":
+                total += _dot_flops(c, op)
+            for key in ("calls", "to_apply", "body"):
+                for callee in _called(op.attrs, key):
+                    total += flops_only(callee, (*seen, cname))
+        return total
+
+    def _dot_flops(c: _Computation, op: _Op) -> float:
+        res_elems = 0
+        for dt, dims in op.result_shapes:
+            n = 1
+            for d in dims:
+                n *= d
+            res_elems += n
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        contraction = 1
+        if m and op.operands:
+            lhs = c.symbols.get(op.operands[0])
+            if lhs:
+                dims = lhs[0][1]
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        contraction *= dims[int(idx)]
+        return 2.0 * res_elems * contraction
+
+    def visit(cname: str, stack=()) -> HloStats:
+        if cname in memo:
+            return memo[cname]
+        if cname in stack or cname not in comps:
+            return HloStats()
+        c = comps[cname]
+        st = HloStats()
+        for op in c.ops:
+            if op.kind == "dot":
+                st.flops += _dot_flops(c, op)
+            if op.kind in COLLECTIVES or any(
+                    op.kind == k + s for k in COLLECTIVES
+                    for s in ("-start", "-done")):
+                base = next((k for k in COLLECTIVES if op.kind.startswith(k)),
+                            None)
+                if base and not op.kind.endswith("-done"):
+                    rb = _shape_bytes(op.result_shapes)
+                    g = _group_size(op.attrs)
+                    if base == "all-gather":
+                        b = rb / max(g, 1)
+                    elif base == "reduce-scatter":
+                        b = rb * g
+                    else:
+                        b = rb
+                    st.coll_bytes += b
+                    st.coll_by_kind[base] += b
+                    st.n_collectives += 1
+            # HBM bytes (TPU-fusion-adjusted, see _BYTE_OPS note)
+            if op.kind in _BYTE_OPS:
+                b = _shape_bytes(op.result_shapes)
+                for o in op.operands:
+                    sh = c.symbols.get(o)
+                    if sh:
+                        b += _shape_bytes(sh)
+                st.hbm_bytes += b
+            elif op.kind in _WINDOW_OPS:
+                # aliased window move: read+write of the moved window only
+                if op.kind == "dynamic-update-slice" and len(op.operands) > 1:
+                    upd = c.symbols.get(op.operands[1])
+                    st.hbm_bytes += 2 * _shape_bytes(upd) if upd else 0
+                else:
+                    st.hbm_bytes += 2 * _shape_bytes(op.result_shapes)
+            elif op.kind in COLLECTIVES or any(
+                    op.kind == k + sfx for k in COLLECTIVES
+                    for sfx in ("-start",)):
+                st.hbm_bytes += 2 * _shape_bytes(op.result_shapes)
+            # control flow
+            if op.kind == "while":
+                bodies = _called(op.attrs, "body")
+                conds = _called(op.attrs, "condition")
+                trips = trip_count(comps[conds[0]]) if conds and \
+                    conds[0] in comps else 1
+                for bname in bodies:
+                    st.add(visit(bname, (*stack, cname)), mult=trips)
+                for cn in conds:
+                    st.add(visit(cn, (*stack, cname)), mult=trips)
+            elif op.kind == "fusion":
+                for callee in _called(op.attrs, "calls"):
+                    st.flops += flops_only(callee)
+            elif op.kind in ("call", "async-start"):
+                for callee in _called(op.attrs, "to_apply"):
+                    st.add(visit(callee, (*stack, cname)))
+            elif op.kind == "conditional":
+                branches = _called(op.attrs, "branch_computations")
+                if branches:
+                    sub = [visit(b, (*stack, cname)) for b in branches]
+                    worst = max(sub, key=lambda s: s.flops + s.hbm_bytes)
+                    st.add(worst)
+        memo[cname] = st
+        return st
+
+    return visit(entry)

@@ -1,0 +1,117 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (DESIGN.md §7):
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_operand_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (whole-program,
+i.e. already per-partition after SPMD; we multiply back to global where
+noted). Collective bytes are parsed from the post-SPMD optimized HLO text —
+the sum of operand sizes of all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute ops.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Collective operand bytes per kind (while-trip aware, via hlo_stats)."""
+    from repro.analysis import hlo_stats
+    st = hlo_stats.analyze(hlo_text)
+    out = {k: int(v) for k, v in st.coll_by_kind.items()}
+    out["total"] = int(st.coll_bytes)
+    out["count"] = st.n_collectives
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective operand bytes
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(cost_analysis: Dict[str, float], hlo_text: str,
+                   chips: int, model_flops: Optional[float] = None,
+                   ) -> Roofline:
+    """Terms from the static HLO analysis (hlo_stats — while-trip aware;
+    XLA's own cost_analysis counts loop bodies once and is kept only as a
+    recorded diagnostic). model_flops is the GLOBAL 6ND-style count;
+    useful_ratio = model_flops / (flops * chips)."""
+    from repro.analysis import hlo_stats
+    st = hlo_stats.analyze(hlo_text)
+    flops = st.flops
+    hbm = st.hbm_bytes
+    coll = st.coll_bytes
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops / (flops * chips)
+              if model_flops and flops else None)
+    return Roofline(flops, hbm, coll, chips, compute_s, memory_s,
+                    collective_s, dominant, model_flops, useful)
+
+
+# ------------------------------------------------------- MODEL_FLOPS (6ND)
+def model_flops(cfg, shape_kind: str, batch: int, seq: int,
+                params_total: int, params_active: int) -> float:
+    """6*N*D for train, 2*N*D per generated token for decode/prefill-style
+    forward (D = tokens processed)."""
+    n = params_active
+    tokens = batch * (1 if shape_kind == "decode" else seq)
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def count_params(struct_tree) -> int:
+    import jax
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(struct_tree)))
+
+
+def active_params(cfg, total: int) -> int:
+    """MoE: discount inactive experts (top_k of n_experts active)."""
+    if not cfg.n_experts:
+        return total
+    import numpy as np
+    # expert params per layer (gate+up+down)
+    moe_layers = sum(s.unit.count("moe") + s.unit.count("mla_moe")
+                     for s in cfg.stages for _ in range(1)) or 0
+    moe_layers = sum((s.unit.count("moe") + s.unit.count("mla_moe"))
+                     * s.repeats for s in cfg.stages)
+    per_expert = 3 * cfg.d_model * cfg.expert_d_ff
+    inactive = moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return total - int(inactive)

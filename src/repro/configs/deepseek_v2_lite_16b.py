@@ -1,0 +1,7 @@
+"""Config module for ``deepseek-v2-lite-16b`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "deepseek-v2-lite-16b"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

@@ -1,0 +1,7 @@
+"""Config module for ``gemma2-9b`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "gemma2-9b"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

@@ -1,0 +1,7 @@
+"""Config module for ``llama4-scout-17b-a16e`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "llama4-scout-17b-a16e"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

@@ -1,0 +1,7 @@
+"""Config module for ``llama-3.2-vision-90b`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "llama-3.2-vision-90b"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

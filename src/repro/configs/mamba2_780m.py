@@ -1,0 +1,7 @@
+"""Config module for ``mamba2-780m`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "mamba2-780m"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

@@ -1,0 +1,22 @@
+"""SCOPe pipeline defaults — the paper's own experimental configuration
+(§VII): Azure cost table, 5.5-month window, no-archive tier set, the
+Tables IX-XI variant grid, and the TPC-H capacity ratios of Table XII."""
+
+import numpy as np
+
+from repro.core.costs import azure_table, tpch_capacity_table
+from repro.core.scope import ScopeConfig, paper_variants
+
+COST_TABLE = azure_table()
+EVAL_MONTHS = 5.5
+TIERS_NO_ARCHIVE = (0, 1, 2)
+
+
+def default_config() -> ScopeConfig:
+    return ScopeConfig(tier_whitelist=TIERS_NO_ARCHIVE, months=EVAL_MONTHS)
+
+
+def variant_grid(total_gb: float):
+    """The 11 policy rows of Tables IX-XI for a dataset of ``total_gb``."""
+    cap = np.array([0.163, 0.326, 0.4891, np.inf]) * total_gb * 3.0
+    return paper_variants(cap)

@@ -1,0 +1,7 @@
+"""Config module for ``qwen2-7b`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "qwen2-7b"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

@@ -1,0 +1,7 @@
+"""Config module for ``qwen3-4b`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "qwen3-4b"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

@@ -1,0 +1,7 @@
+"""Config module for ``whisper-small`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "whisper-small"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

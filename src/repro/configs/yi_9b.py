@@ -1,0 +1,7 @@
+"""Config module for ``yi-9b`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "yi-9b"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

@@ -1,0 +1,7 @@
+"""Config module for ``zamba2-2.7b`` (see configs/registry.py for source)."""
+
+from repro.configs.registry import get_config
+
+ARCH = "zamba2-2.7b"
+CONFIG = get_config(ARCH)
+SMOKE_CONFIG = get_config(ARCH, smoke=True)

@@ -1,0 +1,229 @@
+"""COMPREDICT — compression ratio / decompression-speed prediction (paper §V).
+
+Core pieces, mirroring the paper's ablation axes:
+ * features   : 'size' (naive) vs 'weighted_entropy' H(P,d) per dtype
+                (+ 'bucketed' variant: entropy of each successive 20% of rows);
+ * sampling   : 'random' row samples vs 'queries' (query-result samples);
+ * layouts    : 'row' (CSV-like) vs 'col' (parquet-like);
+ * schemes    : real codecs measured on the serialized bytes;
+ * models     : RandomForest / MLP / KernelRidge(SVR) / Averaging (core.ml).
+
+Everything here is label-generation + feature extraction; models come from
+:mod:`repro.core.ml`, codecs from :mod:`repro.storage.codecs`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import ml
+from repro.data.tables import Table, dtype_class, DTYPE_CLASSES
+from repro.storage.codecs import Codec, default_codecs, measure
+
+
+# ------------------------------------------------------------------ features
+def weighted_entropy(table: Table) -> Dict[str, float]:
+    """H(P,d) = -sum_{s in P[:,d]} len(s) * pr(s) * log pr(s), one per dtype.
+
+    pr(s) is the empirical probability of string value s among the values of
+    all columns with dtype-class d; len(s) its string length (paper §V).
+    """
+    by_dtype: Dict[str, List[np.ndarray]] = {d: [] for d in DTYPE_CLASSES}
+    for name, col in table.columns.items():
+        by_dtype[dtype_class(col)].append(table._col_str(col))
+    out = {}
+    for d, cols in by_dtype.items():
+        if not cols:
+            out[d] = 0.0
+            continue
+        vals = np.concatenate(cols)
+        uniq, counts = np.unique(vals, return_counts=True)
+        pr = counts / counts.sum()
+        lens = np.char.str_len(uniq.astype(str))
+        out[d] = float(-(lens * pr * np.log(pr + 1e-300)).sum())
+    return out
+
+
+def bucketed_weighted_entropy(table: Table, n_buckets: int = 5) -> List[float]:
+    """Entropy of each successive 1/n_buckets of rows (paper's sorted-data
+    feature): captures local repetition that column sorting creates."""
+    n = table.num_rows
+    feats: List[float] = []
+    edges = np.linspace(0, n, n_buckets + 1).astype(int)
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        h = weighted_entropy(table.select(slice(lo, hi)))
+        feats.extend(h[d] for d in DTYPE_CLASSES)
+    return feats
+
+
+def _entropy_block(table: Table) -> List[float]:
+    """Per-dtype feature block: [H(P,d), plain entropy, distinct fraction,
+    mean value length, #columns] for d in {int,float,str}."""
+    by_dtype: Dict[str, List[np.ndarray]] = {d: [] for d in DTYPE_CLASSES}
+    for col in table.columns.values():
+        by_dtype[dtype_class(col)].append(table._col_str(col))
+    feats: List[float] = []
+    for d in DTYPE_CLASSES:
+        cols = by_dtype[d]
+        if not cols:
+            feats += [0.0] * 5
+            continue
+        vals = np.concatenate(cols)
+        uniq, counts = np.unique(vals, return_counts=True)
+        pr = counts / counts.sum()
+        lens = np.char.str_len(uniq.astype(str))
+        feats += [float(-(lens * pr * np.log(pr + 1e-300)).sum()),   # H(P,d)
+                  float(-(pr * np.log(pr + 1e-300)).sum()),
+                  len(uniq) / len(vals),
+                  float(lens @ pr),
+                  float(len(cols))]
+    return feats
+
+
+def extract_features(table: Table, layout: str, kind: str = "weighted_entropy",
+                     ) -> np.ndarray:
+    size = table.nbytes(layout)
+    n_rows = max(table.num_rows, 1)
+    if kind == "size":
+        return np.array([np.log1p(size), np.log1p(n_rows),
+                         len(table.columns)], float)
+    base = [np.log1p(size), np.log1p(n_rows), size / n_rows]
+    if kind == "weighted_entropy":
+        return np.array(base + _entropy_block(table), float)
+    if kind == "bucketed":
+        return np.array(base + _entropy_block(table)
+                        + bucketed_weighted_entropy(table), float)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------ sampling
+def random_samples(table: Table, n_samples: int, rows_each: int,
+                   seed: int = 0) -> List[Table]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_samples):
+        k = min(rows_each, table.num_rows)
+        idx = rng.choice(table.num_rows, size=k, replace=False)
+        out.append(table.select(np.sort(idx)))
+    return out
+
+
+def query_samples(queries, db_tables: Dict[str, Table],
+                  max_rows: int = 4000) -> List[Table]:
+    """Partitions derived from query results — the paper's better sampler."""
+    out = []
+    for q in queries:
+        t = db_tables[q.table]
+        rows = q.rows[:max_rows]
+        if len(rows) == 0:
+            continue
+        out.append(t.select(rows))
+    return out
+
+
+# -------------------------------------------------------------------- labels
+@dataclasses.dataclass
+class LabeledSet:
+    X: np.ndarray                  # (n, f) features
+    ratio: np.ndarray              # (n,)   compression ratio R
+    dspeed: np.ndarray             # (n,)   decompression sec/GB D'
+    scheme: str
+    layout: str
+    feature_kind: str
+
+
+def build_dataset(samples: Sequence[Table], codec: Codec, layout: str,
+                  feature_kind: str = "weighted_entropy") -> LabeledSet:
+    X, R, D = [], [], []
+    for t in samples:
+        raw = t.serialize(layout)
+        if len(raw) < 64:
+            continue
+        m = measure(codec, raw)
+        X.append(extract_features(t, layout, feature_kind))
+        R.append(m.ratio)
+        D.append(m.decompress_sec_per_gb)
+    return LabeledSet(np.stack(X), np.array(R), np.array(D),
+                      codec.name, layout, feature_kind)
+
+
+# ------------------------------------------------------------------ pipeline
+MODELS = {
+    "Averaging": lambda: ml.Averaging(),
+    "RandomForest": lambda: ml.RandomForest(n_trees=30, max_depth=12),
+    "NeuralNetwork": lambda: ml.MLP(hidden=(64, 64), epochs=500),
+    "SVR": lambda: ml.KernelRidge(alpha=1e-2),
+}
+
+
+@dataclasses.dataclass
+class EvalResult:
+    model: str
+    target: str               # 'ratio' | 'dspeed'
+    mae: float
+    mape: float
+    r2: float
+
+
+def train_eval(ds: LabeledSet, model_name: str, target: str,
+               train_frac: float = 0.7, seed: int = 0) -> Tuple[object, EvalResult]:
+    rng = np.random.default_rng(seed)
+    n = len(ds.X)
+    order = rng.permutation(n)
+    cut = max(int(n * train_frac), 1)
+    tr, te = order[:cut], order[cut:]
+    y = ds.ratio if target == "ratio" else ds.dspeed
+    model = MODELS[model_name]()
+    model.fit(ds.X[tr], y[tr])
+    pred = model.predict(ds.X[te] if len(te) else ds.X[tr])
+    ytrue = y[te] if len(te) else y[tr]
+    res = EvalResult(model_name, target, ml.mae(ytrue, pred),
+                     ml.mape(ytrue, pred), ml.r2(ytrue, pred))
+    return model, res
+
+
+class CompressionPredictor:
+    """Production interface: per-(scheme, layout) RF models predicting
+    (ratio, decompression sec/GB) from weighted-entropy features."""
+
+    def __init__(self, feature_kind: str = "weighted_entropy",
+                 model_name: str = "RandomForest"):
+        self.feature_kind = feature_kind
+        self.model_name = model_name
+        self.models: Dict[Tuple[str, str, str], object] = {}
+
+    def fit(self, samples: Sequence[Table], layouts: Sequence[str] = ("row", "col"),
+            codecs: Optional[Sequence[Codec]] = None) -> "CompressionPredictor":
+        codecs = codecs or [c for c in default_codecs() if c.name != "none"]
+        for layout in layouts:
+            for codec in codecs:
+                ds = build_dataset(samples, codec, layout, self.feature_kind)
+                for target in ("ratio", "dspeed"):
+                    m = MODELS[self.model_name]()
+                    y = ds.ratio if target == "ratio" else ds.dspeed
+                    m.fit(ds.X, y)
+                    self.models[(codec.name, layout, target)] = m
+        return self
+
+    def predict(self, table: Table, scheme: str, layout: str) -> Tuple[float, float]:
+        """Returns (ratio, decompression sec/GB); scheme 'none' is (1, 0)."""
+        if scheme == "none":
+            return 1.0, 0.0
+        x = extract_features(table, layout, self.feature_kind)[None, :]
+        r = float(self.models[(scheme, layout, "ratio")].predict(x)[0])
+        d = float(self.models[(scheme, layout, "dspeed")].predict(x)[0])
+        return max(r, 1.0), max(d, 0.0)
+
+    def predict_matrix(self, tables: Sequence[Table], schemes: Sequence[str],
+                       layout: str) -> Tuple[np.ndarray, np.ndarray]:
+        """(N,K) ratio and decompression-sec/GB matrices for OPTASSIGN."""
+        N, K = len(tables), len(schemes)
+        R = np.ones((N, K))
+        D = np.zeros((N, K))
+        for i, t in enumerate(tables):
+            for k, s in enumerate(schemes):
+                R[i, k], D[i, k] = self.predict(t, s, layout)
+        return R, D

@@ -1,0 +1,288 @@
+"""Self-contained ML models for COMPREDICT and access prediction.
+
+No sklearn in the container, so: CART trees + random forest (NumPy), an MLP
+regressor/classifier trained with Adam (pure JAX), and kernel ridge regression
+(the paper's SVR stand-in). All models share fit/predict and are deliberately
+small — COMPREDICT's training sets are O(10^2..10^3) rows (paper §V:
+"training the model takes a few seconds").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ------------------------------------------------------------------- metrics
+
+def mae(y, p):
+    return float(np.mean(np.abs(np.asarray(y) - np.asarray(p))))
+
+
+def mape(y, p):
+    y, p = np.asarray(y), np.asarray(p)
+    return float(np.mean(np.abs(y - p) / np.maximum(np.abs(y), 1e-9))) * 100.0
+
+
+def r2(y, p):
+    y, p = np.asarray(y), np.asarray(p)
+    ss_res = float(np.sum((y - p) ** 2))
+    ss_tot = float(np.sum((y - y.mean()) ** 2))
+    return 1.0 - ss_res / max(ss_tot, 1e-12)
+
+
+def f1_binary(y, p) -> float:
+    y, p = np.asarray(y).astype(int), np.asarray(p).astype(int)
+    tp = int(np.sum((y == 1) & (p == 1)))
+    fp = int(np.sum((y == 0) & (p == 1)))
+    fn = int(np.sum((y == 1) & (p == 0)))
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    return 2 * prec * rec / max(prec + rec, 1e-12)
+
+
+def confusion(y, p, n_classes: int) -> np.ndarray:
+    m = np.zeros((n_classes, n_classes), int)
+    for a, b in zip(np.asarray(y).astype(int), np.asarray(p).astype(int)):
+        m[a, b] += 1
+    return m
+
+
+# ---------------------------------------------------------------- CART trees
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    thresh: float = 0.0
+    left: Optional["_Node"] = None
+    right: Optional["_Node"] = None
+    value: float = 0.0         # mean (regression) or class probs index
+    probs: Optional[np.ndarray] = None
+
+
+class DecisionTree:
+    """CART: variance reduction (regression) / gini (classification)."""
+
+    def __init__(self, max_depth: int = 8, min_leaf: int = 2,
+                 n_features: Optional[int] = None, task: str = "reg",
+                 n_classes: int = 2, rng: Optional[np.random.Generator] = None):
+        self.max_depth, self.min_leaf = max_depth, min_leaf
+        self.n_features, self.task, self.n_classes = n_features, task, n_classes
+        self.rng = rng or np.random.default_rng(0)
+        self.root: Optional[_Node] = None
+
+    def _leaf(self, y: np.ndarray) -> _Node:
+        if self.task == "reg":
+            return _Node(value=float(y.mean()))
+        probs = np.bincount(y.astype(int), minlength=self.n_classes) / len(y)
+        return _Node(value=float(probs.argmax()), probs=probs)
+
+    def _impurity(self, y: np.ndarray) -> float:
+        if self.task == "reg":
+            return float(y.var()) * len(y)
+        p = np.bincount(y.astype(int), minlength=self.n_classes) / len(y)
+        return float(1.0 - np.sum(p ** 2)) * len(y)
+
+    def _split(self, X: np.ndarray, y: np.ndarray, depth: int) -> _Node:
+        if depth >= self.max_depth or len(y) < 2 * self.min_leaf or \
+                np.all(y == y[0]):
+            return self._leaf(y)
+        d = X.shape[1]
+        feats = self.rng.permutation(d)[: (self.n_features or d)]
+        parent = self._impurity(y)
+        best_gain, best = 1e-12, None
+        for f in feats:
+            order = np.argsort(X[:, f], kind="stable")
+            xs, ys = X[order, f], y[order]
+            # candidate thresholds between distinct values
+            distinct = np.nonzero(np.diff(xs) > 1e-12)[0]
+            if len(distinct) == 0:
+                continue
+            # subsample candidate split points for speed
+            cand = distinct if len(distinct) <= 32 else \
+                distinct[np.linspace(0, len(distinct) - 1, 32).astype(int)]
+            for i in cand:
+                nl = i + 1
+                if nl < self.min_leaf or len(y) - nl < self.min_leaf:
+                    continue
+                gain = parent - self._impurity(ys[:nl]) - self._impurity(ys[nl:])
+                if gain > best_gain:
+                    best_gain = gain
+                    best = (f, (xs[i] + xs[i + 1]) / 2.0)
+        if best is None:
+            return self._leaf(y)
+        f, t = best
+        mask = X[:, f] <= t
+        return _Node(feature=int(f), thresh=float(t),
+                     left=self._split(X[mask], y[mask], depth + 1),
+                     right=self._split(X[~mask], y[~mask], depth + 1))
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "DecisionTree":
+        self.root = self._split(np.asarray(X, float), np.asarray(y), 0)
+        return self
+
+    def _pred_one(self, x: np.ndarray) -> _Node:
+        node = self.root
+        while node.left is not None:
+            node = node.left if x[node.feature] <= node.thresh else node.right
+        return node
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return np.array([self._pred_one(x).value for x in np.asarray(X, float)])
+
+    def predict_proba(self, X: np.ndarray) -> np.ndarray:
+        return np.stack([self._pred_one(x).probs for x in np.asarray(X, float)])
+
+
+class RandomForest:
+    """Bootstrap-aggregated CART forest (paper's best model, §IV-C & §V)."""
+
+    def __init__(self, n_trees: int = 40, max_depth: int = 10, min_leaf: int = 2,
+                 task: str = "reg", n_classes: int = 2, seed: int = 0):
+        self.task, self.n_classes = task, n_classes
+        self.seed, self.n_trees = seed, n_trees
+        self.max_depth, self.min_leaf = max_depth, min_leaf
+        self.trees: List[DecisionTree] = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForest":
+        X, y = np.asarray(X, float), np.asarray(y)
+        rng = np.random.default_rng(self.seed)
+        n, d = X.shape
+        mfeat = max(1, int(np.ceil(np.sqrt(d)))) if self.task == "clf" \
+            else max(1, d // 3 + 1)
+        self.trees = []
+        for i in range(self.n_trees):
+            idx = rng.integers(0, n, n)
+            t = DecisionTree(self.max_depth, self.min_leaf, mfeat, self.task,
+                             self.n_classes, np.random.default_rng(self.seed + i))
+            self.trees.append(t.fit(X[idx], y[idx]))
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        if self.task == "reg":
+            return np.mean([t.predict(X) for t in self.trees], axis=0)
+        probs = np.mean([t.predict_proba(X) for t in self.trees], axis=0)
+        return probs.argmax(1)
+
+
+# --------------------------------------------------------------------- (J)MLP
+def _mlp_init(key, sizes: Tuple[int, ...]):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        params.append({"w": jax.random.normal(sub, (a, b)) * jnp.sqrt(2.0 / a),
+                       "b": jnp.zeros((b,))})
+    return params
+
+
+def _mlp_apply(params, x):
+    for layer in params[:-1]:
+        x = jax.nn.gelu(x @ layer["w"] + layer["b"])
+    last = params[-1]
+    return x @ last["w"] + last["b"]
+
+
+class MLP:
+    """JAX MLP regressor/classifier with Adam; inputs standardized."""
+
+    def __init__(self, hidden: Tuple[int, ...] = (64, 64), task: str = "reg",
+                 n_classes: int = 2, lr: float = 3e-3, epochs: int = 600,
+                 seed: int = 0):
+        self.hidden, self.task, self.n_classes = hidden, task, n_classes
+        self.lr, self.epochs, self.seed = lr, epochs, seed
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "MLP":
+        X = np.asarray(X, np.float32)
+        self.mu, self.sd = X.mean(0), X.std(0) + 1e-8
+        Xs = (X - self.mu) / self.sd
+        if self.task == "reg":
+            y = np.asarray(y, np.float32)[:, None]
+            self.ymu, self.ysd = y.mean(), y.std() + 1e-8
+            ys = (y - self.ymu) / self.ysd
+            out = 1
+        else:
+            ys = np.asarray(y, np.int32)
+            out = self.n_classes
+        key = jax.random.PRNGKey(self.seed)
+        params = _mlp_init(key, (X.shape[1], *self.hidden, out))
+
+        if self.task == "reg":
+            def loss_fn(p, xb, yb):
+                return jnp.mean((_mlp_apply(p, xb) - yb) ** 2)
+        else:
+            def loss_fn(p, xb, yb):
+                logits = _mlp_apply(p, xb)
+                logp = jax.nn.log_softmax(logits)
+                return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], 1))
+
+        # Adam (hand-rolled; no optax in the container)
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+        lr, b1, b2, eps = self.lr, 0.9, 0.999, 1e-8
+
+        @jax.jit
+        def step(p, m, v, t, xb, yb):
+            g = jax.grad(loss_fn)(p, xb, yb)
+            m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+            v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+            mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+            vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+            p = jax.tree.map(lambda a, mm, vv: a - lr * mm / (jnp.sqrt(vv) + eps),
+                             p, mh, vh)
+            return p, m, v
+
+        xb = jnp.asarray(Xs)
+        yb = jnp.asarray(ys)
+        for t in range(1, self.epochs + 1):
+            params, m, v = step(params, m, v, t, xb, yb)
+        self.params = params
+        return self
+
+    def _raw(self, X):
+        Xs = (np.asarray(X, np.float32) - self.mu) / self.sd
+        return np.asarray(_mlp_apply(self.params, jnp.asarray(Xs)))
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        out = self._raw(X)
+        if self.task == "reg":
+            return out[:, 0] * float(self.ysd) + float(self.ymu)
+        return out.argmax(1)
+
+
+class KernelRidge:
+    """RBF kernel ridge regression — the offline stand-in for the paper's SVR."""
+
+    def __init__(self, alpha: float = 1e-2, gamma: Optional[float] = None):
+        self.alpha, self.gamma = alpha, gamma
+
+    def _kernel(self, A, B):
+        d2 = ((A[:, None, :] - B[None, :, :]) ** 2).sum(-1)
+        return np.exp(-self.g * d2)
+
+    def fit(self, X, y):
+        X = np.asarray(X, float)
+        self.mu, self.sd = X.mean(0), X.std(0) + 1e-8
+        self.Xtr = (X - self.mu) / self.sd
+        self.g = self.gamma or 1.0 / X.shape[1]
+        K = self._kernel(self.Xtr, self.Xtr)
+        self.coef = np.linalg.solve(K + self.alpha * np.eye(len(K)),
+                                    np.asarray(y, float))
+        return self
+
+    def predict(self, X):
+        Xs = (np.asarray(X, float) - self.mu) / self.sd
+        return self._kernel(Xs, self.Xtr) @ self.coef
+
+
+class Averaging:
+    """Paper's naive baseline: predict the training mean."""
+
+    def fit(self, X, y):
+        self.mean = float(np.mean(y))
+        return self
+
+    def predict(self, X):
+        return np.full(len(X), self.mean)

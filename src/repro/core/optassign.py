@@ -1,0 +1,302 @@
+"""OPTASSIGN — optimal tier + compression-scheme assignment (paper §IV).
+
+Solvers
+-------
+``greedy_assign``       exact for unbounded capacities (Thm 3), O(NLK); the
+                        vectorized JAX version is the PB-scale production path.
+``matching_assign``     exact for equal-size/no-compression with capacities
+                        (Thm 2) via min-cost flow == min-weight bipartite
+                        matching on tier copies.
+``capacitated_assign``  general capacitated case (strongly NP-hard, Thm 1):
+                        Lagrangian dual ascent + greedy repair + 1-swap local
+                        search; validated against ``brute_force`` in tests.
+``brute_force``         exact enumeration oracle for tiny instances.
+
+All solvers consume the (N,L,K) cost tensor and (N,L,K) feasibility mask from
+:mod:`repro.core.costs`, so objective-weight variants (alpha/beta/gamma,
+pushdown fraction, scheme locking for existing partitions) are handled
+uniformly upstream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BIG = 1e18
+
+
+@dataclasses.dataclass
+class Assignment:
+    tier: np.ndarray       # (N,) int
+    scheme: np.ndarray     # (N,) int
+    cost: float            # objective value of chosen cells
+    feasible: bool         # capacity + latency respected
+
+
+def _masked(cost: np.ndarray, feasible: np.ndarray) -> np.ndarray:
+    return np.where(feasible, cost, BIG)
+
+
+def lock_schemes(feasible: np.ndarray, locked_scheme: np.ndarray) -> np.ndarray:
+    """Paper's last ILP constraint: existing partitions keep their scheme.
+
+    ``locked_scheme[n] == -1`` means partition n is new (free choice).
+    """
+    N, L, K = feasible.shape
+    mask = feasible.copy()
+    for n in range(N):
+        k = int(locked_scheme[n])
+        if k >= 0:
+            keep = np.zeros(K, bool)
+            keep[k] = True
+            mask[n] &= keep[None, :]
+    return mask
+
+
+# --------------------------------------------------------------------- greedy
+@partial(jax.jit, static_argnames=())
+def _greedy_jax(cost: jnp.ndarray, feasible: jnp.ndarray):
+    masked = jnp.where(feasible, cost, BIG)
+    flat = masked.reshape(masked.shape[0], -1)
+    idx = jnp.argmin(flat, axis=1)
+    best = jnp.take_along_axis(flat, idx[:, None], axis=1)[:, 0]
+    K = masked.shape[2]
+    return idx // K, idx % K, best
+
+
+def greedy_assign(cost: np.ndarray, feasible: np.ndarray) -> Assignment:
+    """Exact when capacities are unbounded (Thm 3). O(NLK)."""
+    tier, scheme, best = map(np.asarray, _greedy_jax(jnp.asarray(cost),
+                                                     jnp.asarray(feasible)))
+    tier, scheme = tier.astype(int), scheme.astype(int)
+    ok = bool((best < BIG).all())
+    # argmin runs in f32 on device; re-total the objective in f64 for exactness
+    n = np.arange(cost.shape[0])
+    total = float(np.asarray(cost, np.float64)[n, tier, scheme].sum()) if ok \
+        else float("inf")
+    return Assignment(tier, scheme, total, ok)
+
+
+# ------------------------------------------------------------------- matching
+class _MCMF:
+    """Successive-shortest-path min-cost max-flow (SPFA variant). Exact."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.to: list[int] = []
+        self.cap: list[float] = []
+        self.cost: list[float] = []
+        self.head: list[list[int]] = [[] for _ in range(n)]
+
+    def add(self, u: int, v: int, cap: float, cost: float) -> None:
+        self.head[u].append(len(self.to)); self.to.append(v)
+        self.cap.append(cap); self.cost.append(cost)
+        self.head[v].append(len(self.to)); self.to.append(u)
+        self.cap.append(0.0); self.cost.append(-cost)
+
+    def run(self, s: int, t: int):
+        flow = cost = 0.0
+        INF = float("inf")
+        while True:
+            dist = [INF] * self.n
+            in_q = [False] * self.n
+            prev_e = [-1] * self.n
+            dist[s] = 0.0
+            queue = [s]
+            in_q[s] = True
+            while queue:
+                u = queue.pop(0)
+                in_q[u] = False
+                for e in self.head[u]:
+                    if self.cap[e] > 1e-12 and dist[u] + self.cost[e] < dist[self.to[e]] - 1e-12:
+                        dist[self.to[e]] = dist[u] + self.cost[e]
+                        prev_e[self.to[e]] = e
+                        if not in_q[self.to[e]]:
+                            queue.append(self.to[e])
+                            in_q[self.to[e]] = True
+            if dist[t] == INF:
+                return flow, cost
+            # bottleneck
+            push, v = INF, t
+            while v != s:
+                e = prev_e[v]
+                push = min(push, self.cap[e])
+                v = self.to[e ^ 1]
+            v = t
+            while v != s:
+                e = prev_e[v]
+                self.cap[e] -= push
+                self.cap[e ^ 1] += push
+                v = self.to[e ^ 1]
+            flow += push
+            cost += push * dist[t]
+
+
+def matching_assign(cost_nl: np.ndarray, feasible_nl: np.ndarray,
+                    capacity_units: np.ndarray) -> Assignment:
+    """Equal-size partitions, no compression (Thm 2).
+
+    Min-weight bipartite matching of N unit-size partitions onto Z_l tier
+    copies; the tier-copy graph collapses to a transportation problem solved
+    exactly by min-cost max-flow (source -> partition -> tier -> sink).
+    """
+    N, L = cost_nl.shape
+    cost = _masked(cost_nl, feasible_nl)
+    cap = np.minimum(capacity_units.astype(np.float64), N)
+    S, T = N + L, N + L + 1
+    g = _MCMF(N + L + 2)
+    for n in range(N):
+        g.add(S, n, 1.0, 0.0)
+        for l in range(L):
+            if cost[n, l] < BIG:
+                g.add(n, N + l, 1.0, float(cost[n, l]))
+    for l in range(L):
+        g.add(N + l, T, float(cap[l]), 0.0)
+    flow, total = g.run(S, T)
+    if flow < N - 1e-9:
+        return Assignment(np.full(N, -1), np.zeros(N, int), float("inf"), False)
+    assign = np.full(N, -1, np.int64)
+    for n in range(N):
+        for e in g.head[n]:
+            v = g.to[e]
+            if N <= v < N + L and e % 2 == 0 and g.cap[e] < 0.5:
+                assign[n] = v - N
+    return Assignment(assign, np.zeros(N, int), float(total), True)
+
+
+# ---------------------------------------------------------------- capacitated
+def _usage(stored_gb_nlk: np.ndarray, tier: np.ndarray, scheme: np.ndarray,
+           L: int) -> np.ndarray:
+    N = tier.shape[0]
+    use = np.zeros(L)
+    for n in range(N):
+        use[tier[n]] += stored_gb_nlk[n, tier[n], scheme[n]]
+    return use
+
+
+def capacitated_assign(
+    cost: np.ndarray,            # (N,L,K)
+    feasible: np.ndarray,        # (N,L,K)
+    stored_gb: np.ndarray,       # (N,L,K) size occupied if cell chosen
+    capacity_gb: np.ndarray,     # (L,)
+    iters: int = 200,
+    seed: int = 0,
+) -> Assignment:
+    """General OPTASSIGN with capacities: Lagrangian + repair + local search."""
+    N, L, K = cost.shape
+    masked = _masked(cost, feasible)
+    lam = np.zeros(L)
+    cap = capacity_gb.copy()
+    finite_cap = np.isfinite(cap)
+    best: Optional[Assignment] = None
+    step0 = masked[masked < BIG].mean() / max(cap[finite_cap].mean(), 1e-9) \
+        if finite_cap.any() else 0.0
+
+    def solve(lam_vec: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        adj = masked + (lam_vec[None, :, None] * stored_gb)
+        flat = adj.reshape(N, -1)
+        idx = flat.argmin(1)
+        return idx // K, idx % K
+
+    def repair_and_score(tier: np.ndarray, scheme: np.ndarray) -> Assignment:
+        tier, scheme = tier.copy(), scheme.copy()
+        use = _usage(stored_gb, tier, scheme, L)
+        # Greedy repair: move cheapest-delta items out of over-capacity tiers.
+        for l in np.argsort(-(use - cap)):
+            while finite_cap[l] and use[l] > cap[l] + 1e-9:
+                members = [n for n in range(N) if tier[n] == l]
+                best_mv, best_delta = None, np.inf
+                for n in members:
+                    cur = masked[n, l, scheme[n]]
+                    for l2 in range(L):
+                        if l2 == l:
+                            continue
+                        for k2 in range(K):
+                            if masked[n, l2, k2] >= BIG:
+                                continue
+                            room = cap[l2] - use[l2] if finite_cap[l2] else np.inf
+                            if stored_gb[n, l2, k2] > room + 1e-9:
+                                continue
+                            delta = masked[n, l2, k2] - cur
+                            if delta < best_delta:
+                                best_delta, best_mv = delta, (n, l2, k2)
+                if best_mv is None:
+                    return Assignment(tier, scheme, float("inf"), False)
+                n, l2, k2 = best_mv
+                use[l] -= stored_gb[n, l, scheme[n]]
+                use[l2] += stored_gb[n, l2, k2]
+                tier[n], scheme[n] = l2, k2
+        # 1-move local search
+        improved = True
+        while improved:
+            improved = False
+            for n in range(N):
+                cur_c = masked[n, tier[n], scheme[n]]
+                for l2 in range(L):
+                    for k2 in range(K):
+                        if masked[n, l2, k2] >= cur_c - 1e-12:
+                            continue
+                        new_use_l2 = use[l2] + stored_gb[n, l2, k2] \
+                            - (stored_gb[n, tier[n], scheme[n]] if l2 == tier[n] else 0)
+                        if finite_cap[l2] and new_use_l2 > cap[l2] + 1e-9:
+                            continue
+                        use[tier[n]] -= stored_gb[n, tier[n], scheme[n]]
+                        use[l2] += stored_gb[n, l2, k2]
+                        tier[n], scheme[n] = l2, k2
+                        improved = True
+                        break
+                    else:
+                        continue
+                    break
+        total = float(sum(masked[n, tier[n], scheme[n]] for n in range(N)))
+        ok = total < BIG
+        return Assignment(tier, scheme, total if ok else float("inf"), ok)
+
+    for it in range(iters):
+        tier, scheme = solve(lam)
+        cand = repair_and_score(tier, scheme)
+        if cand.feasible and (best is None or cand.cost < best.cost):
+            best = cand
+        use = _usage(stored_gb, tier, scheme, L)
+        grad = np.where(finite_cap, use - cap, 0.0)
+        if np.all(grad <= 1e-9) and it > 0:
+            break
+        lam = np.maximum(0.0, lam + step0 / (1 + it) * grad)
+    if best is None:
+        tier, scheme = solve(lam)
+        best = repair_and_score(tier, scheme)
+    return best
+
+
+# ---------------------------------------------------------------- brute force
+def brute_force(cost: np.ndarray, feasible: np.ndarray,
+                stored_gb: Optional[np.ndarray] = None,
+                capacity_gb: Optional[np.ndarray] = None) -> Assignment:
+    """Exact oracle by enumeration — only for tiny test instances."""
+    N, L, K = cost.shape
+    masked = _masked(cost, feasible)
+    cells = [[(l, k) for l in range(L) for k in range(K)
+              if masked[n, l, k] < BIG] for n in range(N)]
+    best_cost, best_pick = float("inf"), None
+    for pick in itertools.product(*cells):
+        if capacity_gb is not None:
+            use = np.zeros(L)
+            for n, (l, k) in enumerate(pick):
+                use[l] += stored_gb[n, l, k]
+            if np.any(use > capacity_gb + 1e-9):
+                continue
+        c = sum(masked[n, l, k] for n, (l, k) in enumerate(pick))
+        if c < best_cost:
+            best_cost, best_pick = c, pick
+    if best_pick is None:
+        return Assignment(np.zeros(N, int), np.zeros(N, int), float("inf"), False)
+    tier = np.array([l for l, _ in best_pick])
+    scheme = np.array([k for _, k in best_pick])
+    return Assignment(tier, scheme, float(best_cost), True)

@@ -1,0 +1,95 @@
+"""Columnar table abstraction + row/column serialization.
+
+Stands in for parquet (column-major) vs CSV (row-major) in COMPREDICT's
+layout study (§V "Row vs Column Oriented Storage"). A table is a dict of
+named NumPy columns with dtype classes {int, float, str}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+DTYPE_CLASSES = ("int", "float", "str")
+
+
+def dtype_class(col: np.ndarray) -> str:
+    if col.dtype.kind in "iu":
+        return "int"
+    if col.dtype.kind == "f":
+        return "float"
+    return "str"
+
+
+@dataclasses.dataclass
+class Table:
+    name: str
+    columns: Dict[str, np.ndarray]
+
+    @property
+    def num_rows(self) -> int:
+        return len(next(iter(self.columns.values()))) if self.columns else 0
+
+    def select(self, mask_or_idx) -> "Table":
+        return Table(self.name, {k: v[mask_or_idx] for k, v in self.columns.items()})
+
+    def head(self, n: int) -> "Table":
+        return self.select(slice(0, n))
+
+    def concat(self, other: "Table") -> "Table":
+        return Table(self.name, {k: np.concatenate([v, other.columns[k]])
+                                 for k, v in self.columns.items()})
+
+    def sort_by(self, col: str) -> "Table":
+        return self.select(np.argsort(self.columns[col], kind="stable"))
+
+    # -------------------------------------------------------- serialization
+    def _str_cols(self) -> List[np.ndarray]:
+        out = []
+        for v in self.columns.values():
+            if dtype_class(v) == "float":
+                out.append(np.char.mod("%.4f", v))
+            elif dtype_class(v) == "int":
+                out.append(np.char.mod("%d", v))
+            else:
+                out.append(v.astype(str))
+        return out
+
+    def to_row_bytes(self) -> bytes:
+        """CSV-like row-major layout: rows of comma-joined fields."""
+        cols = self._str_cols()
+        if not cols:
+            return b""
+        joined = cols[0]
+        for c in cols[1:]:
+            joined = np.char.add(np.char.add(joined, ","), c)
+        return ("\n".join(joined.tolist()) + "\n").encode()
+
+    def to_col_bytes(self) -> bytes:
+        """Parquet-like column-major layout: each column contiguous."""
+        chunks = []
+        for name, v in self.columns.items():
+            header = f"#{name}\n".encode()
+            body = ("\n".join(np.asarray(self._col_str(v)).tolist()) + "\n").encode()
+            chunks.append(header + body)
+        return b"".join(chunks)
+
+    def _col_str(self, v: np.ndarray) -> np.ndarray:
+        if dtype_class(v) == "float":
+            return np.char.mod("%.4f", v)
+        if dtype_class(v) == "int":
+            return np.char.mod("%d", v)
+        return v.astype(str)
+
+    def serialize(self, layout: str) -> bytes:
+        if layout == "row":
+            return self.to_row_bytes()
+        if layout == "col":
+            return self.to_col_bytes()
+        raise ValueError(layout)
+
+    # ---------------------------------------------------------------- sizes
+    def nbytes(self, layout: str = "row") -> int:
+        return len(self.serialize(layout))

@@ -1,0 +1,65 @@
+"""Trace-time distributed context.
+
+Model code stays mesh-agnostic; launch code activates a mesh here (inside
+`jax.set_mesh`) and the few distribution-aware ops consult it:
+  * ops.decode_attention -> seq-sharded flash-decoding (LSE psum combine)
+  * transformer residual-stream SP constraints (Megatron sequence parallel)
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_MESH = None
+
+
+@contextlib.contextmanager
+def activate(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        with jax.set_mesh(mesh):
+            yield mesh
+    finally:
+        _MESH = prev
+
+
+def mesh():
+    return _MESH
+
+
+def dp_axes() -> Optional[Tuple[str, ...]]:
+    if _MESH is None:
+        return None
+    return tuple(a for a in _MESH.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size() -> int:
+    if _MESH is None or "model" not in _MESH.axis_names:
+        return 1
+    return _MESH.shape["model"]
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint iff a mesh is active."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_sp(x):
+    """Sequence-parallel residual constraint: (B, S, d) -> shard S over
+    'model' (and B over DP). No-op off-mesh or when S doesn't divide."""
+    if _MESH is None:
+        return x
+    tp = model_axis_size()
+    dp = dp_axes()
+    if x.ndim != 3 or tp <= 1 or x.shape[1] % tp != 0:
+        return x
+    dps = dp if len(dp) > 1 else dp[0]
+    return jax.lax.with_sharding_constraint(x, P(dps, "model", None))

@@ -1,0 +1,170 @@
+"""Sharding rules: parameter PartitionSpec trees + batch/cache specs.
+
+Megatron-style TP on the 'model' axis, DP over ('pod','data'):
+  * embed / lm_head           vocab-sharded
+  * wq, mlp up/gate           column-parallel (output dim)
+  * wo, mlp down              row-parallel (input dim)
+  * wk/wv                     head-sharded when kv_heads % tp == 0, else
+                              replicated (GQA-standard)
+  * MoE experts_*             expert-parallel (leading E axis)
+  * mamba in_z/in_x/conv_x/out_proj  head-channel-sharded; in_bc/in_dt tiny,
+                              replicated; per-head vectors (A_log, D, dt_bias)
+                              sharded over heads
+Leaf specs are matched by parameter name; stacked (scanned) parameters get
+leading None axes padded automatically by rank.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _rules(cfg: ModelConfig, tp: int) -> Dict[str, P]:
+    kv_shardable = cfg.n_kv_heads > 0 and (
+        cfg.n_kv_heads % tp == 0 or cfg.n_kv_heads == cfg.n_heads)
+    kv = P(None, "model") if kv_shardable else P(None, None)
+    kv_b = P("model") if kv_shardable else P(None)
+    h_shardable = cfg.mamba_heads % tp == 0 if cfg.ssm_state else False
+    hvec = P("model") if h_shardable else P(None)
+    return {
+        # embedding / head
+        "embed": P("model", None),
+        "lm_head": P(None, "model"),
+        "final_norm": P(None),
+        # attention
+        "wq": P(None, "model"), "bq": P("model"),
+        "wk": kv, "bk": kv_b, "wv": kv, "bv": kv_b,
+        "wo": P("model", None),
+        "q_norm": P(None), "k_norm": P(None),
+        # MLA
+        "w_dkv": P(None, None), "kv_norm": P(None),
+        "w_uk": P(None, "model"), "w_uv": P(None, "model"),
+        # MLP
+        "gate": P(None, "model"), "up": P(None, "model"),
+        "down": P("model", None),
+        # MoE
+        "router": P(None, None),
+        "experts_gate": P("model", None, None),
+        "experts_up": P("model", None, None),
+        "experts_down": P("model", None, None),
+        # norms
+        "ln1": P(None), "ln2": P(None), "lnc": P(None),
+        "post_ln1": P(None), "post_ln2": P(None),
+        # mamba2
+        "in_z": P(None, "model"), "in_x": P(None, "model"),
+        "in_bc": P(None, None),
+        "in_dt": P(None, "model") if h_shardable else P(None, None),
+        "conv_x_w": P(None, "model"), "conv_x_b": P("model"),
+        "conv_bc_w": P(None, None), "conv_bc_b": P(None),
+        "A_log": hvec, "D": hvec, "dt_bias": hvec,
+        "gate_norm": P("model"),
+        "out_proj": P("model", None),
+    }
+
+
+def param_specs(params_tree, cfg: ModelConfig, tp: int):
+    """PartitionSpec pytree matching ``params_tree`` (arrays or
+    ShapeDtypeStructs)."""
+    rules = _rules(cfg, tp)
+
+    def spec_for(path, leaf) -> P:
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        base = rules.get(name, P())
+        pad = leaf.ndim - len(base)
+        assert pad >= 0, (name, leaf.ndim, base)
+        return P(*([None] * pad), *base)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_tree)
+
+
+def _dp(mesh, batch: Optional[int] = None):
+    """DP spec component; degrades to replication when the global batch
+    doesn't divide the DP axes (e.g. long_500k's batch=1)."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    if batch is not None and batch % total != 0:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def batch_specs(cfg: ModelConfig, mesh, kind: str = "train",
+                batch: Optional[int] = None):
+    """Input shardings. Batch over ('pod','data'); seq/model unsharded for
+    token inputs (TP shards activations internally)."""
+    dp = _dp(mesh, batch)
+    spec = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.cross_context:
+        spec["context"] = P(dp, None, None)
+    if cfg.encoder_stages is not None:
+        spec["frames"] = P(dp, None, None)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: Optional[int] = None):
+    """KV caches: batch over DP axes, sequence over 'model' (SP decode);
+    mamba states: batch over DP, heads/channels over 'model'."""
+    dp = _dp(mesh, batch)
+    kv = P(None, dp, "model", None, None)       # (rep, B, S, hkv, hd)
+    mla = P(None, dp, "model", None)            # (rep, B, S, r+rope)
+    h_shardable = cfg.ssm_state and cfg.mamba_heads % mesh.shape["model"] == 0
+    conv = P(None, dp, None, "model")           # (rep, B, W-1, C)
+    ssm = P(None, dp, "model" if h_shardable else None, None, None)
+    specs = []
+    for s in cfg.stages:
+        unit = []
+        for kind in s.unit:
+            if kind in ("attn", "attn_local", "moe", "decoder", "shared_attn"):
+                unit.append((kv, kv))
+            elif kind in ("mla_dense", "mla_moe"):
+                unit.append(mla)
+            elif kind == "mamba":
+                unit.append((conv, P(None, dp, None, None), ssm))
+            else:
+                unit.append(None)
+        specs.append(tuple(unit))
+    return tuple(specs)
+
+
+def to_named(tree, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that no-ops when no mesh is active."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def zero1_specs(spec_tree, struct_tree, dp_axis: str = "data",
+                dp_size: int = 16):
+    """ZeRO-1: optimizer-state specs = param TP specs + the first unsharded
+    divisible dim additionally sharded over the data axis. Keeps fp32
+    master/m/v within HBM for the 90B-class archs (DESIGN §6)."""
+
+    def f(spec, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (e, d) in enumerate(zip(entries, leaf.shape)):
+            if e is None and d % dp_size == 0 and d >= dp_size:
+                entries[i] = dp_axis
+                break
+        return P(*entries)
+
+    return jax.tree.map(f, spec_tree, struct_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,107 @@
+"""Flash-decoding Pallas kernel: one query token vs a long KV cache.
+
+Grid = (B, Hkv, S/block_k) with the cache axis innermost-sequential; all
+`rep = Hq/Hkv` query heads of a KV group are processed together as a
+(rep, D) tile, so GQA costs one cache pass regardless of rep. kv_len is a
+scalar-prefetch operand (SMEM) that masks the valid cache prefix; sliding
+windows bound it from below.
+
+The model-parallel version (distributed/sharding.py) shards the cache's
+sequence axis and combines per-shard (m, l, acc) with a psum LSE merge —
+this kernel computes each shard's partials.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            window: Optional[int], softcap: Optional[float],
+            block_k: int, scale: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[pl.program_id(0)]
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (rep, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)            # (bk, Dv)
+    s = jnp.dot(q, k.T)                               # (rep, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    mask = k_pos < kv_len
+    if window is not None:
+        mask &= k_pos > kv_len - 1 - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, window=None, softcap=None,
+                     block_k: int = 512, interpret: bool = False):
+    """q: (B,Hq,D); k/v: (B,S,Hkv,D/Dv); kv_len: (B,) -> (B,Hq,Dv)."""
+    B, Hq, D = q.shape
+    _, S, Hkv, Dv = (*k.shape[:3], v.shape[-1])
+    rep = Hq // Hkv
+    block_k = min(block_k, S)
+    pad_k = (-S) % block_k
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nk = k.shape[1] // block_k
+    qr = q.reshape(B, Hkv, rep, D)
+    grid = (B, Hkv, nk)
+
+    kernel = functools.partial(_kernel, window=window, softcap=softcap,
+                               block_k=block_k, scale=1.0 / (D ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, rep, D), lambda b, h, ki, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, D),
+                             lambda b, h, ki, lens: (b, ki, h, 0)),
+                pl.BlockSpec((1, block_k, 1, Dv),
+                             lambda b, h, ki, lens: (b, ki, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rep, Dv),
+                                   lambda b, h, ki, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, 1), jnp.float32),
+                pltpu.VMEM((rep, Dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rep, Dv), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qr, k, v)
+    return out.reshape(B, Hq, Dv)

@@ -1,0 +1,121 @@
+"""Flash attention Pallas TPU kernel (GQA + sliding window + logit softcap).
+
+Tiling: grid = (B * Hq, Sq/block_q, Sk/block_k); the K dimension is the
+innermost (sequential on TPU) grid axis, so the online-softmax state
+(m, l, acc) lives in VMEM scratch and is carried across K steps. Blocks are
+(block_q, D) / (block_k, D) VMEM tiles — D is the full head dim (MXU-aligned
+128/256 for all assigned archs; 80-dim heads are zero-padded by ops).
+
+Validated in interpret mode against kernels/ref.py (tests/test_kernels.py);
+compiled path targets TPU (MXU matmuls via jnp.dot on f32 accumulators).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: Optional[int], softcap: Optional[float],
+            block_q: int, block_k: int, sq: int, sk: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, Dv)
+    s = jnp.dot(q, k.T)                               # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + (sk - sq)                                   # queries sit at the end
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < sk
+    if causal:
+        mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False):
+    """q: (B,Sq,Hq,D); k/v: (B,Sk,Hkv,D/Dv) -> (B,Sq,Hq,Dv)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, Dv = (*k.shape[:3], v.shape[-1])
+    rep = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    qt = jnp.moveaxis(q, 2, 1).reshape(B * Hq, Sq, D)          # (BH, Sq, D)
+    kt = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Sk, D)
+    vt = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Sk, Dv)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pad_k), (0, 0)))
+    nq = qt.shape[1] // block_q
+    nk = kt.shape[1] // block_k
+    grid = (B * Hq, nq, nk)
+
+    def kv_index(bh, qi, ki):
+        b = bh // Hq
+        h = (bh % Hq) // rep
+        return (b * Hkv + h, ki, 0)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, sq=Sq, sk=Sk,
+        scale=1.0 / (D ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, Dv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dv), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq + pad_q, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :Sq].reshape(B, Hq, Sq, Dv)
+    return jnp.moveaxis(out, 1, 2)

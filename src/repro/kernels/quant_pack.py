@@ -1,0 +1,49 @@
+"""Int8 block-quantization Pallas kernel — the TPU-native 'computational
+compression' codec (checkpoint shards, gradient compression).
+
+Each 256-element block shares one absmax scale; the kernel processes
+(rows x 256) VMEM tiles, fully parallel grid. Ratio ~3.9x on fp32 payloads,
+decompression at HBM speed — COMPREDICT treats it as just another scheme.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)             # (rows, block)
+    scale = jnp.maximum(jnp.abs(x).max(axis=1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quant_pack(x, *, block: int = 256, rows: int = 256,
+               interpret: bool = False):
+    """x: any shape with size % block == 0 -> (q int8 same shape,
+    scale (size/block,) f32)."""
+    shape = x.shape
+    xb = x.reshape(-1, block)
+    nblk = xb.shape[0]
+    rows = min(rows, nblk)
+    pad = (-nblk) % rows
+    if pad:
+        xb = jnp.pad(xb, ((0, pad), (0, 0)))
+    grid = (xb.shape[0] // rows,)
+    kernel = functools.partial(_kernel, block=block)
+    q, s = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(xb.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((xb.shape[0], 1), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+    return q[:nblk].reshape(shape), s[:nblk, 0]

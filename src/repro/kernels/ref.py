@@ -1,0 +1,308 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU/dry-run execution
+path). The attention references are *chunked* with online softmax — same
+algorithm and memory behaviour class as the kernels, so dry-run HLO bytes do
+not blow up with materialized (seq x seq) score matrices.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softcap(x, cap: Optional[float]):
+    return x if cap is None else cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------ attention (ref)
+def attention_naive(q, k, v, *, causal=True, window=None, softcap=None,
+                    kv_len=None):
+    """Materialized-scores oracle for tests. q:(B,Sq,Hq,D) k/v:(B,Sk,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    rep = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, rep, D)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    s = _softcap(s, softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        offset = Sk - Sq  # queries are the last Sq positions
+        mask &= k_pos <= (q_pos + offset)
+        if window is not None:
+            mask &= k_pos > (q_pos + offset - window)
+    if kv_len is not None:
+        mask = mask[None] & (k_pos[None] < kv_len[:, None, None])
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    else:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        chunk=512):
+    """Online-softmax chunked attention (the kernel's algorithm in jnp).
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
+    Queries occupy the LAST Sq positions of the Sk keys (prefill/train when
+    Sq == Sk; decode-append when Sq < Sk).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    rep = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qr = q.reshape(B, Sq, Hkv, rep, D).astype(jnp.float32) * scale
+    offset = Sk - Sq
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D).astype(jnp.float32)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, Dv).astype(jnp.float32)
+    q_pos = jnp.arange(Sq) + offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, c_idx = inp
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhrd,bkhd->bqhrk", qr, kb)
+        s = _softcap(s, softcap)
+        mask = (k_pos[None, :] < Sk) if pad else jnp.ones((1, chunk), bool)
+        mask = jnp.broadcast_to(mask, (Sq, chunk))
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqhrk,bkhd->bqhrd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, rep), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, rep, Dv), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc_t, vc_t, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, Dv).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len, *, window=None, softcap=None,
+                         chunk=1024):
+    """Single-token attention against a (possibly partially-filled) KV cache.
+
+    q: (B, Hq, D); k, v: (B, S, Hkv, D); kv_len: (B,) valid prefix lengths.
+    Chunked online softmax — memory O(chunk), so 500k caches are fine.
+    """
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    rep = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qr = q.reshape(B, Hkv, rep, D).astype(jnp.float32) * scale
+    pad = (-S) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, Hkv, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, Hkv, Dv), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, c_idx = inp
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhrd,bkhd->bhrk", qr, kb.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        mask = k_pos[None, :] < kv_len[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > kv_len[:, None] - 1 - window
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhrk,bkhd->bhrd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Dv).astype(q.dtype)
+
+
+def decode_attention_partials(q, k, v, local_len, *, offset=0,
+                              global_len=None, window=None, softcap=None,
+                              chunk=1024):
+    """Unnormalized decode attention over a LOCAL cache shard.
+
+    q: (B, Hq, D); k, v: (B, S_loc, Hkv, D/Dv); local_len: (B,) valid length
+    within this shard; offset: global position of the shard's first slot;
+    global_len: (B,) total valid length (for window masks). Returns
+    (acc (B,Hq,Dv) unnormalized, m (B,Hq), l (B,Hq)) for LSE combination
+    across shards (flash-decoding).
+    """
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    rep = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qr = q.reshape(B, Hkv, rep, D).astype(jnp.float32) * scale
+    pad = (-S) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, Hkv, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, Hkv, Dv), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, c_idx = inp
+        k_loc = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bhrd,bkhd->bhrk", qr, kb.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        mask = k_loc[None, :] < local_len[:, None]
+        if window is not None and global_len is not None:
+            k_glob = k_loc[None, :] + offset
+            mask &= k_glob > global_len[:, None] - 1 - window
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhrk,bkhd->bhrd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    return (acc.reshape(B, Hq, Dv), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+# -------------------------------------------------------------- mamba2 (SSD)
+def ssd_scan_ref(x, dt, A, B, C, D=None, *, chunk=128,
+                 initial_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 state-space-duality chunked scan (pure jnp oracle).
+
+    x : (b, s, h, p)   per-head inputs
+    dt: (b, s, h)      softplus-ed step sizes (>0)
+    A : (h,)           negative decay rates
+    B : (b, s, g, n)   input maps (g groups; h % g == 0)
+    C : (b, s, g, n)   output maps
+    D : (h,) optional  skip connection
+    Returns (y: (b,s,h,p), final_state: (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = x.shape[1]
+    nc = S // chunk
+    xq = jnp.moveaxis(x.reshape(b, nc, chunk, h, p), 1, 0).astype(jnp.float32)
+    dtq = jnp.moveaxis(dt.reshape(b, nc, chunk, h), 1, 0).astype(jnp.float32)
+    Bq = jnp.moveaxis(B.reshape(b, nc, chunk, g, n), 1, 0).astype(jnp.float32)
+    Cq = jnp.moveaxis(C.reshape(b, nc, chunk, g, n), 1, 0).astype(jnp.float32)
+    A32 = A.astype(jnp.float32)
+
+    def per_chunk(state, inp):
+        xb, dtb, Bb, Cb = inp             # (b,q,h,p),(b,q,h),(b,q,g,n)x2
+        dA = dtb * A32[None, None, :]     # (b,q,h) log-decay per step
+        cum = jnp.cumsum(dA, axis=1)      # (b,q,h)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j <= i
+        li = cum[:, :, None, :] - cum[:, None, :, :]      # (b,q,q,h)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Lmat = jnp.where(causal[None, :, :, None], jnp.exp(li), 0.0)
+        Bh = jnp.repeat(Bb, rep, axis=2)  # (b,q,h,n)
+        Ch = jnp.repeat(Cb, rep, axis=2)
+        cb = jnp.einsum("bihn,bjhn->bijh", Ch, Bh)         # (b,q,q,h)
+        w = cb * Lmat * dtb[:, None, :, :]                 # weight on x_j
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xb)
+        # inter-chunk: contribution of incoming state
+        y_inter = jnp.einsum("bihn,bhpn->bihp", Ch, state) * \
+            jnp.exp(cum)[..., None]
+        # state update: S' = exp(sum dA) * S + sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)       # (b,q,h)
+        contrib = jnp.einsum("bjh,bjhp,bjhn->bhpn",
+                             decay_to_end * dtb, xb, Bh)
+        state_new = jnp.exp(cum[:, -1, :])[..., None, None] * state + contrib
+        return state_new, y_intra + y_inter
+
+    state0 = (initial_state.astype(jnp.float32) if initial_state is not None
+              else jnp.zeros((b, h, p, n), jnp.float32))
+    final_state, yq = jax.lax.scan(per_chunk, state0, (xq, dtq, Bq, Cq))
+    y = jnp.moveaxis(yq, 0, 1).reshape(b, S, h, p)[:, :s]
+    if D is not None:
+        y = y + x[:, :s].astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step_ref(state, x_t, dt_t, A, B_t, C_t, D=None):
+    """Single decode step. state: (b,h,p,n); x_t: (b,h,p); dt_t: (b,h);
+    B_t, C_t: (b,g,n). Returns (y_t: (b,h,p), new_state)."""
+    b, h, p, n = state.shape
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)   # (b,h,n)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32)[None, :])
+    state_new = state * dA[..., None, None] + \
+        (dt_t.astype(jnp.float32)[..., None, None]
+         * x_t.astype(jnp.float32)[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", state_new, Ch)
+    if D is not None:
+        y = y + x_t.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x_t.dtype), state_new
+
+
+# --------------------------------------------------------- entropy features
+def byte_entropy_ref(data: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Byte histogram + Shannon entropy (bits/byte). data: (n,) uint8."""
+    hist = jnp.zeros((256,), jnp.int32).at[data.astype(jnp.int32)].add(1)
+    p = hist.astype(jnp.float32) / jnp.maximum(data.shape[0], 1)
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
+    return hist, ent
+
+
+# -------------------------------------------------------------- quant8 pack
+def quant_pack_ref(x: jnp.ndarray, block: int = 256):
+    """Per-block absmax int8 quantization. x: (..., M) with M % block == 0."""
+    shape = x.shape
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.maximum(jnp.abs(xb).max(axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), scale
+
+
+def quant_unpack_ref(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    block = q.size // scale.size
+    xb = q.reshape(-1, block).astype(jnp.float32) * scale[:, None]
+    return xb.reshape(q.shape).astype(dtype)

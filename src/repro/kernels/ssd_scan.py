@@ -1,0 +1,120 @@
+"""Mamba2 SSD chunked-scan Pallas kernel.
+
+Grid = (B * H, S/chunk) with the chunk axis innermost-sequential: the running
+SSM state (headdim x dstate) is carried in VMEM scratch across chunks — the
+TPU-native replacement for the CUDA kernel's inter-block shared-memory pass.
+Per chunk the kernel computes (all on MXU-sized f32 tiles):
+
+  cum      = cumsum(dt * A)                     (intra-chunk log decay)
+  y_intra  = ((C B^T) .* L .* dt_j) x           L[i,j] = exp(cum_i - cum_j)
+  y_inter  = (C state_prev) .* exp(cum)
+  state    = exp(cum_last) * state_prev + sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+
+B/C group handling (h -> group h // (H/G)) happens in the index_map, so the
+kernel body is group-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, st_ref,
+            state_scr, *, chunk: int, use_d: bool):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)              # (q, p)
+    dt = dt_ref[0].astype(jnp.float32)            # (q, 1)
+    A = a_ref[0, 0]                               # scalar (f32)
+    Bm = b_ref[0].astype(jnp.float32)             # (q, n)
+    Cm = c_ref[0].astype(jnp.float32)             # (q, n)
+
+    dA = dt[:, 0] * A                             # (q,)
+    cum = jnp.cumsum(dA)                          # (q,)
+    li = cum[:, None] - cum[None, :]              # (q, q)
+    iot = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jot = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lmat = jnp.where(jot <= iot, jnp.exp(li), 0.0)
+    cb = jnp.dot(Cm, Bm.T)                        # (q, q)
+    w = cb * Lmat * dt[:, 0][None, :]             # weight on x_j
+    y = jnp.dot(w, x)                             # intra-chunk
+    state = state_scr[...]                        # (p, n)
+    y += jnp.dot(Cm, state.T) * jnp.exp(cum)[:, None]     # inter-chunk (q, p)
+    if use_d:
+        y += x * d_ref[0, 0]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state' = exp(cum_last) * state + sum_j decay_j dt_j x_j B_j^T -> (p, n)
+    decay_end = jnp.exp(cum[-1] - cum)            # (q,)
+    contrib = jnp.dot(x.T, (decay_end * dt[:, 0])[:, None] * Bm)  # (p, n)
+    state_scr[...] = jnp.exp(cum[-1]) * state + contrib
+
+    @pl.when(ci == nc - 1)
+    def _finalize():
+        st_ref[0] = state_scr[...].astype(st_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, D=None, *, initial_state=None, chunk: int = 128,
+             interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x:(b,s,h,p) dt:(b,s,h) A:(h,) B/C:(b,s,g,n) D:(h,)|None.
+    Returns (y:(b,s,h,p), final_state:(b,h,p,n)). initial_state must be None
+    (training path); decode uses ops.ssd_step."""
+    assert initial_state is None
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = x.shape[1]
+    nc = S // chunk
+    xt = jnp.moveaxis(x, 2, 1).reshape(b * h, S, p)          # (bh, S, p)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(b * h, S, 1)
+    Bt = jnp.moveaxis(B, 2, 1).reshape(b * g, S, n)
+    Ct = jnp.moveaxis(C, 2, 1).reshape(b * g, S, n)
+    A32 = A.astype(jnp.float32).reshape(h, 1)
+    use_d = D is not None
+    Dm = (D if use_d else jnp.zeros((h,))).astype(jnp.float32).reshape(h, 1)
+
+    def bc_index(bh, ci):
+        return ((bh // h) * g + (bh % h) // rep, ci, 0)
+
+    kernel = functools.partial(_kernel, chunk=chunk, use_d=use_d)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh % h, 0)),
+            pl.BlockSpec((1, chunk, n), bc_index),
+            pl.BlockSpec((1, chunk, n), bc_index),
+            pl.BlockSpec((1, 1), lambda bh, ci: (bh % h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, S, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A32, Bt, Ct, Dm)
+    y = jnp.moveaxis(y.reshape(b, h, S, p), 1, 2)[:, :s]
+    return y, st.reshape(b, h, p, n)

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder host devices; record memory/cost analysis + roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+
+(The XLA_FLAGS assignment above MUST precede any jax import — device count
+locks at first init. Tests/benches import everything else, never this file.)
+"""
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as rl
+from repro.configs.registry import arch_names, get_config
+from repro.distributed import ctx
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        param_specs, to_named, zero1_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (SHAPES, applicable, input_specs,
+                                 param_structs, train_state_structs)
+from repro.models import transformer as tr
+from repro.training import train_step as ts
+from repro.training.optimizer import AdamWState
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "results" / "dryrun"
+
+
+def _opt_state_specs(p_specs, p_structs, mesh):
+    dp_size = mesh.shape["data"]
+    z = zero1_specs(p_specs, p_structs, "data", dp_size)
+    return AdamWState(step=P(), master=z, m=z, v=z, err=None)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatches: int = 1):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    sc = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name, tp)
+    p_structs = param_structs(cfg, tp)
+    p_specs = param_specs(p_structs, cfg, tp)
+    named = lambda tree: to_named(tree, mesh)
+
+    with ctx.activate(mesh):
+        if sc.kind == "train":
+            tcfg = ts.TrainConfig(remat=True, microbatches=microbatches)
+            state_structs = train_state_structs(cfg, tcfg, tp)
+            state_specs = {
+                "params": p_specs,
+                "opt": _opt_state_specs(p_specs, p_structs, mesh)}
+            b_specs = batch_specs(cfg, mesh)
+            fn = functools.partial(ts.train_step, cfg=cfg, tcfg=tcfg)
+            jitted = jax.jit(fn, in_shardings=(named(state_specs),
+                                               named(b_specs)),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_structs, specs["batch"])
+        elif sc.kind == "prefill":
+            def prefill(params, tokens, context=None):
+                if cfg.encoder_stages is not None:
+                    context = tr.encode(params, context, cfg)
+                return tr.forward(params, tokens, cfg, context=context)
+            dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+            dps = dp if len(dp) > 1 else dp[0]
+            args = [p_structs, specs["tokens"]]
+            shard = [named(p_specs), NamedSharding(mesh, P(dps, None))]
+            if "context" in specs:
+                args.append(specs["context"])
+                shard.append(NamedSharding(mesh, P(dps, None, None)))
+            jitted = jax.jit(prefill, in_shardings=tuple(shard))
+            lowered = jitted.lower(*args)
+        else:  # decode
+            c_specs = cache_specs(cfg, mesh, batch=sc.batch)
+            from repro.distributed.sharding import _dp
+            dps = _dp(mesh, sc.batch)
+            have_ctx = "context" in specs
+
+            if have_ctx:
+                def decode(params, cache, tokens, pos, context):
+                    return tr.decode_step(params, cache, tokens, pos, cfg,
+                                          context=context)
+            else:
+                def decode(params, cache, tokens, pos):
+                    return tr.decode_step(params, cache, tokens, pos, cfg)
+            args = [p_structs, specs["cache"], specs["tokens"], specs["pos"]]
+            shard = [named(p_specs), named(c_specs),
+                     NamedSharding(mesh, P(dps, None)),
+                     NamedSharding(mesh, P(dps))]
+            if have_ctx:
+                args.append(specs["context"])
+                shard.append(NamedSharding(mesh, P(dps, None, None)))
+            jitted = jax.jit(decode, in_shardings=tuple(shard),
+                             out_shardings=(None, named(c_specs)),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(*args)
+    return cfg, mesh, lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             microbatches: int = 1):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__mb{microbatches}" if microbatches > 1 else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    cfg = get_config(arch)
+    ok, reason = applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "timestamp": time.strftime("%Y-%m-%d %H:%M:%S")}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] SKIP {arch} {shape_name} {mesh_name}: {reason}")
+        return rec
+    try:
+        t0 = time.time()
+        cfg, mesh, lowered = lower_cell(arch, shape_name, multi_pod,
+                                        microbatches)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        try:
+            import zstandard as zstd
+            (out_dir / f"{arch}__{shape_name}__{mesh_name}.hlo.zst"
+             ).write_bytes(zstd.ZstdCompressor(3).compress(hlo.encode()))
+        except Exception:
+            pass
+        coll = rl.collective_bytes(hlo)
+        chips = mesh.size
+        total = rl.count_params(param_structs(cfg, mesh.shape["model"]))
+        active = rl.active_params(cfg, total)
+        sc = SHAPES[shape_name]
+        mflops = rl.model_flops(cfg, sc.kind, sc.batch, sc.seq, total, active)
+        roof = rl.roofline_terms(cost, hlo, chips, mflops)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 1),
+            "compile_s": round(t2 - t1, 1),
+            "chips": chips,
+            "params_total": total,
+            "params_active": active,
+            "memory_analysis": {
+                k: getattr(mem, k) for k in
+                ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")
+                if hasattr(mem, k)},
+            "cost_analysis": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed",
+                                        "transcendentals",
+                                        "optimal_seconds")},
+            "collective_bytes": coll,
+            "roofline": roof.as_dict(),
+        })
+        print(f"[dryrun] OK  {arch} {shape_name} {mesh_name} "
+              f"compile={t2 - t1:.0f}s dominant={roof.dominant} "
+              f"(c={roof.compute_s:.4f}s m={roof.memory_s:.4f}s "
+              f"x={roof.collective_s:.4f}s)")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] ERR {arch} {shape_name} {mesh_name}: {rec['error']}")
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = out_dir / f"{arch}__{shape}__{mesh_name}.json"
+                if args.skip_existing and path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        continue
+                run_cell(arch, shape, mp, out_dir, args.microbatches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+touches no JAX device state — dryrun.py must set XLA_FLAGS before first init.
+
+Topology: TPU v5e, 16x16 = 256 chips/pod; multi-pod adds a leading "pod"
+axis over DCN. "data" carries DP (batch), "model" carries TP/EP/SP.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small meshes for CPU tests (requires enough host devices)."""
+    if pod:
+        return _mk((pod, data, model), ("pod", "data", "model"))
+    return _mk((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Axes that carry the batch: ('pod','data') on multi-pod meshes."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"]

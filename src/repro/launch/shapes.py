@@ -1,0 +1,107 @@
+"""Assigned input-shape sets + ShapeDtypeStruct stand-ins (no allocation).
+
+Per-arch shape grid (assignment):
+  train_4k     seq 4096,    global_batch 256   (train_step)
+  prefill_32k  seq 32768,   global_batch 32    (prefill forward)
+  decode_32k   seq 32768,   global_batch 128   (serve_step, KV cache = seq)
+  long_500k    seq 524288,  global_batch 1     (serve_step; SSM/hybrid only)
+
+``long_500k`` is skipped (reported as such) for full-attention archs; whisper
+decode uses its fixed 1500-frame encoder context as the cross input.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCfg("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCfg("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    """(runs?, reason). long_500k only for sub-quadratic archs (DESIGN §5)."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention architecture: 500k-token cache decode "
+                       "is not sub-quadratic-capable; documented skip")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _context_struct(cfg: ModelConfig, batch: int):
+    if cfg.cross_context:
+        return _sds((batch, cfg.cross_context, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                tp: int = 16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train   -> {'batch': {tokens, labels[, context|frames]}}
+    prefill -> {'tokens'[, 'context'|'frames']}
+    decode  -> {'tokens', 'pos', 'cache'[, 'context']}
+    """
+    sc = SHAPES[shape_name]
+    B, S = sc.batch, sc.seq
+    if sc.kind == "train":
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        if cfg.cross_context:
+            batch["context"] = _context_struct(cfg, B)
+        if cfg.encoder_stages is not None:
+            batch["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+    if sc.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.cross_context:
+            out["context"] = _context_struct(cfg, B)
+        if cfg.encoder_stages is not None:
+            out["context"] = _sds((B, cfg.encoder_context, cfg.d_model),
+                                  jnp.bfloat16)
+        return out
+    # decode: cache sized to the context length
+    cache = jax.eval_shape(
+        lambda: tr.init_cache(cfg, B, max_seq=S, tp=tp))
+    out = {"tokens": _sds((B, 1), jnp.int32),
+           "pos": _sds((B,), jnp.int32),
+           "cache": cache}
+    if cfg.cross_context:
+        out["context"] = _context_struct(cfg, B)
+    if cfg.encoder_stages is not None:
+        out["context"] = _sds((B, cfg.encoder_context, cfg.d_model),
+                              jnp.bfloat16)
+    return out
+
+
+def param_structs(cfg: ModelConfig, tp: int = 16):
+    return jax.eval_shape(
+        lambda k: tr.init_params(k, cfg, tp), jax.random.PRNGKey(0))
+
+
+def train_state_structs(cfg: ModelConfig, tcfg, tp: int = 16):
+    from repro.training import train_step as ts
+    return jax.eval_shape(
+        lambda k: ts.init_train_state(k, cfg, tcfg, tp), jax.random.PRNGKey(0))

@@ -1,0 +1,90 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers.
+
+Functional style: every module is (init(key, cfg) -> params, apply(params, x)).
+Params are plain dict pytrees so stages can stack them on a leading axis and
+scan (transformer.py) and the sharding rules can pattern-match leaf paths
+(distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ------------------------------------------------------------------- helpers
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    # 1/sqrt(dim) keeps tied-head logits at unit scale (CE ~ ln V at init)
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            / np.sqrt(dim)).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:                      # gemma-style (1 + w) scaling
+        w = 1.0 + w
+    return (y * w).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,s,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, d_model, dtype)}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, d_model, d_ff, dtype)
+        p["up"] = dense_init(k3, d_model, d_ff, dtype)
+    else:
+        p["up"] = dense_init(k1, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = jax.nn.gelu(x @ p["up"])
+    return h @ p["down"]

@@ -1,0 +1,130 @@
+"""Mamba2 (SSD) mixer block — arXiv:2405.21060, TPU-adapted.
+
+The selective-state-space layer with state-space duality: inputs project to
+(z, x, B, C, dt); (x | B,C) pass through short causal depthwise convs; the
+SSD chunked scan (kernels/ops.ssd_scan) computes the sequence mix; a gated
+RMSNorm and output projection close the block.
+
+TP adaptation (DESIGN.md §8): the reference implementation fuses one
+in_proj; we block-partition it into in_z/in_x (head-channel-sharded over the
+model axis), in_bc and in_dt (replicated — tiny) so tensor parallelism never
+splits a logical segment. Same math, sharding-clean. The conv is likewise
+split into the x part (channel-sharded) and the B/C part (replicated).
+
+Decode carries (conv_x, conv_bc, ssm_state) — O(1) in context length, which
+is why mamba2/zamba2 are the long_500k architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, rms_norm
+
+N_GROUPS = 1  # B/C groups (mamba2 default)
+
+
+def mamba_init(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.dtype)
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.mamba_heads
+    bc = 2 * N_GROUPS * n
+    ks = jax.random.split(key, 6)
+    dt_init = np.log(np.expm1(np.linspace(1e-3, 0.1, h)))  # softplus^-1
+    return {
+        "in_z": dense_init(ks[0], d, di, dt),
+        "in_x": dense_init(ks[1], d, di, dt),
+        "in_bc": dense_init(ks[2], d, bc, dt),
+        "in_dt": dense_init(ks[3], d, h, dt),
+        "conv_x_w": (jax.random.normal(ks[4], (cfg.conv_width, di),
+                                       jnp.float32) / cfg.conv_width).astype(dt),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_bc_w": (jax.random.normal(ks[5], (cfg.conv_width, bc),
+                                        jnp.float32) / cfg.conv_width).astype(dt),
+        "conv_bc_b": jnp.zeros((bc,), dt),
+        "A_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, h)), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_init, jnp.float32),
+        "gate_norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[0], di, d, dt),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv over seq. u: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba_apply(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence SSD. x: (B, S, d) -> (B, S, d)."""
+    Bsz, S, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    hd = cfg.mamba_headdim
+    z = x @ p["in_z"]
+    xi = _causal_conv(x @ p["in_x"], p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(x @ p["in_bc"], p["conv_bc_w"], p["conv_bc_b"])
+    dt_raw = x @ p["in_dt"]
+    xs = xi.reshape(Bsz, S, h, hd)
+    Bm = bc[..., :N_GROUPS * n].reshape(Bsz, S, N_GROUPS, n)
+    Cm = bc[..., N_GROUPS * n:].reshape(Bsz, S, N_GROUPS, n)
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ops.ssd_scan(xs, dt_v, A, Bm, Cm, p["D"])
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> Tuple:
+    bc = 2 * N_GROUPS * cfg.ssm_state
+    conv_x = jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype)
+    conv_bc = jnp.zeros((batch, cfg.conv_width - 1, bc), dtype)
+    ssm_state = jnp.zeros((batch, cfg.mamba_heads, cfg.mamba_headdim,
+                           cfg.ssm_state), jnp.float32)
+    return conv_x, conv_bc, ssm_state
+
+
+def _conv_step(state, u_t, w, b):
+    """state: (B,W-1,C); u_t: (B,C). Returns (out (B,C), new_state)."""
+    window = jnp.concatenate([state, u_t[:, None]], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(u_t.dtype), \
+        window[:, 1:]
+
+
+def mamba_decode(p, x, cfg: ModelConfig, *, conv_x, conv_bc, ssm_state):
+    """Single-token step. x: (B,1,d). Returns (y, conv_x, conv_bc, ssm)."""
+    Bsz = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    hd = cfg.mamba_headdim
+    z = x @ p["in_z"]
+    xi_t, conv_x = _conv_step(conv_x, (x @ p["in_x"])[:, 0],
+                              p["conv_x_w"], p["conv_x_b"])
+    bc_t, conv_bc = _conv_step(conv_bc, (x @ p["in_bc"])[:, 0],
+                               p["conv_bc_w"], p["conv_bc_b"])
+    dt_raw = (x @ p["in_dt"])[:, 0]
+    xs = xi_t.reshape(Bsz, h, hd)
+    Bm = bc_t[:, :N_GROUPS * n].reshape(Bsz, N_GROUPS, n)
+    Cm = bc_t[:, N_GROUPS * n:].reshape(Bsz, N_GROUPS, n)
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    y_t, ssm_state = ops.ssd_step(ssm_state, xs, dt_v, A, Bm, Cm, p["D"])
+    y = y_t.reshape(Bsz, 1, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["gate_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_x, conv_bc, ssm_state

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts MLP with capacity-based dense dispatch (Shazeer-style).
+
+Expert weights are stacked on a leading expert axis — sharded over the model
+axis for expert parallelism (16e -> 1 expert/rank, 64e -> 4/rank on tp=16).
+The dispatch/combine einsums surface as all-to-all in the SPMD HLO, which is
+what the roofline's collective term measures for MoE cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, dtype_of, mlp_init, mlp_apply
+
+
+def moe_init(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.dtype)
+    E, dff = cfg.n_experts, cfg.expert_d_ff
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "experts_gate": (jax.random.normal(ks[1], (E, d, dff), jnp.float32)
+                         * scale).astype(dt),
+        "experts_up": (jax.random.normal(ks[2], (E, d, dff), jnp.float32)
+                       * scale).astype(dt),
+        "experts_down": (jax.random.normal(ks[3], (E, dff, d), jnp.float32)
+                         / np.sqrt(dff)).astype(dt),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = mlp_init(ks[4], d, cfg.n_shared_experts * dff,
+                               cfg.mlp_act, dt)
+    return p
+
+
+def _moe_block(p, xt, cfg: ModelConfig) -> jnp.ndarray:
+    """Gather/scatter capacity dispatch for ONE token block. xt: (T_b, d).
+
+    One-hot einsum dispatch (Mesh-TF style) pays 2*T*E*C*d dense flops that
+    XLA cannot see through — 20x the expert matmuls themselves at 4k blocks
+    (EXPERIMENTS §Perf iteration 2c). Gathers/scatter-adds move the same
+    data at O(T*k*d) cost; take's autodiff transpose is a scatter-add, so
+    the backward pass is sparse too."""
+    T, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    topv, topi = jax.lax.top_k(logits, k)                    # (T, k)
+    gates = jax.nn.softmax(topv, axis=-1)                    # normalize over k
+    capacity = int(np.ceil(T * k / E * cfg.capacity_factor))
+    capacity = max(min(capacity, T), 1)
+
+    # position of each (token, choice) within its expert's buffer
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)      # (T, k, E)
+    flat = onehot.reshape(T * k, E)
+    pos = jnp.cumsum(flat, axis=0) - flat                    # (T*k, E)
+    pos = (pos.reshape(T, k, E) * onehot).sum(-1)            # (T, k) slot ids
+    kept = pos < capacity                                    # (T, k)
+
+    # scatter token ids into (E, C) expert buffers (slots unique by constr.)
+    tok_ids = jnp.broadcast_to(jnp.arange(T)[:, None], (T, k))
+    e_idx = jnp.where(kept, topi, E)                         # overflow -> bin E
+    c_idx = jnp.clip(pos, 0, capacity - 1).astype(jnp.int32)
+    slot_tok = jnp.zeros((E + 1, capacity), jnp.int32).at[
+        e_idx.reshape(-1), c_idx.reshape(-1)].set(tok_ids.reshape(-1))
+    slot_valid = jnp.zeros((E + 1, capacity), bool).at[
+        e_idx.reshape(-1), c_idx.reshape(-1)].set(True)
+    xe = jnp.take(xt, slot_tok[:E].reshape(-1), axis=0
+                  ).reshape(E, capacity, d)
+    xe = xe * slot_valid[:E, :, None].astype(xe.dtype)        # (E, C, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["experts_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["experts_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["experts_down"])     # (E, C, d)
+
+    # gather back: y_t = sum_k gate * ye[e_tk, c_tk]
+    flat_idx = jnp.clip(topi, 0, E - 1) * capacity + c_idx    # (T, k)
+    y_k = jnp.take(ye.reshape(E * capacity, d), flat_idx.reshape(-1), axis=0
+                   ).reshape(T, k, d)
+    w = (gates * kept).astype(y_k.dtype)
+    return jnp.einsum("tk,tkd->td", w, y_k).astype(xt.dtype)
+
+
+def moe_apply(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d). Top-k capacity routing, dispatched in
+    token blocks: the (T, E, C) one-hot dispatch tensors are
+    O(block^2 * k * cf / E) instead of O(T^2 ...) — at train_4k scale the
+    unblocked form needs TB-scale buffers (EXPERIMENTS §Perf iteration 2).
+
+    Blocks are DP-ALIGNED: the scanned leading dim is unsharded and each
+    iteration processes one ``block`` of tokens per data shard (middle dim
+    carries the batch sharding). Scanning a sharded dim instead triggers
+    XLA 'involuntary full rematerialization' (replicates every block —
+    EXPERIMENTS §Perf iteration 2b)."""
+    from repro.distributed import ctx as dctx
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    mesh = dctx.mesh()
+    dp = dctx.dp_axes() or ()
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    blk = cfg.moe_block_tokens
+    big = blk * dp_total
+    if T % big == 0 and T > blk:
+        nb = T // big
+        # (nb, dp, blk, d): scan dim unsharded, group dim carries the DP
+        # sharding, routing/capacity are PER GROUP (local routing — no
+        # cross-shard cumsum, no involuntary resharding: §Perf iter 2b/2c)
+        xs = xt.reshape(nb, dp_total, blk, d)
+        if mesh is not None and dp:
+            from jax.sharding import PartitionSpec as P
+            dps = dp if len(dp) > 1 else dp[0]
+            xs = jax.lax.with_sharding_constraint(xs, P(None, dps, None, None))
+        blk_fn = jax.vmap(_moe_block, in_axes=(None, 0, None))
+        if nb > 1:
+            y = jax.lax.map(lambda xb: blk_fn(p, xb, cfg), xs)
+        else:
+            y = blk_fn(p, xs[0], cfg)
+    else:
+        y = _moe_block(p, xt, cfg)
+    y = y.reshape(-1, d)[:T]
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x.reshape(T, d), cfg.mlp_act)
+    return y.reshape(B, S, d).astype(x.dtype)
+
+
+def moe_aux_loss(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    """Load-balancing auxiliary loss (Switch-style): E * sum_e f_e * p_e."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top1 = jnp.argmax(logits, -1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    return cfg.n_experts * jnp.sum(frac * probs.mean(0))

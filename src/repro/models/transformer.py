@@ -1,0 +1,337 @@
+"""Stage-based model assembly: init / forward / prefill / decode / loss.
+
+A model is a tuple of stages; each stage scans a repeating unit of blocks
+with parameters stacked on the leading (repeats) axis, so HLO size — and
+dry-run compile time — is O(#stages), not O(#layers). Weight-tied blocks
+('shared_attn', zamba2) keep their parameters at the top level and are
+closed over inside the scan body.
+
+Block kinds (see models/config.py): attn, attn_local, shared_attn, cross,
+decoder, mla_dense, mla_moe, moe, mamba.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import mamba2, moe as moe_mod
+from repro.models.config import ModelConfig, Stage
+from repro.models.layers import (dense_init, dtype_of, embed_init, mlp_apply,
+                                 mlp_init, rms_norm, softcap)
+
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    return ((cfg.vocab_size + 127) // 128) * 128
+
+
+# ------------------------------------------------------------------- blocks
+def block_init(key, kind: str, cfg: ModelConfig, tp: int):
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    nw = lambda: (jnp.zeros if cfg.use_post_norm else jnp.ones)((cfg.d_model,), dt)
+    if kind in ("attn", "attn_local"):
+        p = {"ln1": nw(), "attn": attn.gqa_init(ks[0], cfg, tp),
+             "ln2": nw(), "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                          cfg.mlp_act, dt)}
+        if cfg.use_post_norm:
+            p["post_ln1"] = nw()
+            p["post_ln2"] = nw()
+        return p
+    if kind == "moe":
+        return {"ln1": nw(), "attn": attn.gqa_init(ks[0], cfg, tp),
+                "ln2": nw(), "moe": moe_mod.moe_init(ks[1], cfg)}
+    if kind == "mla_dense":
+        return {"ln1": nw(), "attn": attn.mla_init(ks[0], cfg, tp),
+                "ln2": nw(), "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                             cfg.mlp_act, dt)}
+    if kind == "mla_moe":
+        return {"ln1": nw(), "attn": attn.mla_init(ks[0], cfg, tp),
+                "ln2": nw(), "moe": moe_mod.moe_init(ks[1], cfg)}
+    if kind == "cross":
+        return {"ln1": nw(), "cross": attn.cross_init(ks[0], cfg, tp),
+                "ln2": nw(), "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                             cfg.mlp_act, dt)}
+    if kind == "decoder":
+        return {"ln1": nw(), "attn": attn.gqa_init(ks[0], cfg, tp),
+                "lnc": nw(), "cross": attn.cross_init(ks[1], cfg, tp),
+                "ln2": nw(), "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                                             cfg.mlp_act, dt)}
+    if kind == "mamba":
+        return {"ln1": nw(), "mamba": mamba2.mamba_init(ks[0], cfg)}
+    if kind == "shared_attn":
+        return {}                      # weights live at params['shared']
+    raise ValueError(kind)
+
+
+def _pre(x, w, cfg):
+    return rms_norm(x, w, cfg.norm_eps, plus_one=cfg.use_post_norm)
+
+
+def block_apply(p, kind: str, x, cfg: ModelConfig, *, positions,
+                context=None, shared=None, causal=True):
+    post = cfg.use_post_norm
+    if kind == "shared_attn":
+        p, kind = shared, "attn"
+    if kind in ("attn", "attn_local", "moe", "mla_dense", "mla_moe"):
+        window = cfg.sliding_window if kind == "attn_local" else None
+        if kind.startswith("mla"):
+            a = attn.mla_apply(p["attn"], _pre(x, p["ln1"], cfg), cfg,
+                               positions=positions)
+        else:
+            a = attn.gqa_apply(p["attn"], _pre(x, p["ln1"], cfg), cfg,
+                               positions=positions, causal=causal,
+                               window=window)
+        if post and "post_ln1" in p:
+            a = _pre(a, p["post_ln1"], cfg)
+        x = x + a
+        h = _pre(x, p["ln2"], cfg)
+        if kind in ("moe", "mla_moe"):
+            m = moe_mod.moe_apply(p["moe"], h, cfg)
+        else:
+            m = mlp_apply(p["mlp"], h, cfg.mlp_act)
+        if post and "post_ln2" in p:
+            m = _pre(m, p["post_ln2"], cfg)
+        return x + m
+    if kind == "cross":
+        x = x + attn.cross_apply(p["cross"], _pre(x, p["ln1"], cfg),
+                                 context, cfg)
+        return x + mlp_apply(p["mlp"], _pre(x, p["ln2"], cfg), cfg.mlp_act)
+    if kind == "decoder":
+        x = x + attn.gqa_apply(p["attn"], _pre(x, p["ln1"], cfg), cfg,
+                               positions=positions, causal=True)
+        x = x + attn.cross_apply(p["cross"], _pre(x, p["lnc"], cfg),
+                                 context, cfg)
+        return x + mlp_apply(p["mlp"], _pre(x, p["ln2"], cfg), cfg.mlp_act)
+    if kind == "mamba":
+        return x + mamba2.mamba_apply(p["mamba"], _pre(x, p["ln1"], cfg), cfg)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------------- stages
+def stage_init(key, stage: Stage, cfg: ModelConfig, tp: int):
+    unit_params = []
+    for j, kind in enumerate(stage.unit):
+        if kind == "shared_attn":
+            unit_params.append({})
+            continue
+        keys = jax.random.split(jax.random.fold_in(key, j), stage.repeats)
+        stacked = jax.vmap(lambda k: block_init(k, kind, cfg, tp))(keys)
+        unit_params.append(stacked)
+    return tuple(unit_params)
+
+
+def stage_apply(sp, stage: Stage, x, cfg: ModelConfig, *, positions,
+                context=None, shared=None, causal=True, remat=False):
+    from repro.distributed import ctx as dctx
+
+    def body(h, xs):
+        for j, kind in enumerate(stage.unit):
+            h = block_apply(xs[j], kind, h, cfg, positions=positions,
+                            context=context, shared=shared, causal=causal)
+        # Megatron-SP: residual carry (and remat-saved activations) are
+        # sequence-sharded over the model axis between blocks (no-op off-mesh)
+        return dctx.constrain_sp(h), None
+
+    if remat:
+        # per-block remat: the layer scan saves ONLY the carried residual;
+        # attention probabilities / MLP activations are recomputed in the
+        # backward pass (EXPERIMENTS.md §Perf iteration 1 — without this the
+        # scan AD stacks (L, chunks, B, S, H, K) attention probs: TB/device)
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, sp)
+    return x
+
+
+# -------------------------------------------------------------- model init
+def init_params(key, cfg: ModelConfig, tp: int = 1) -> Dict[str, Any]:
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    V = padded_vocab(cfg)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], V, cfg.d_model, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "stages": tuple(stage_init(jax.random.fold_in(ks[1], i), s, cfg, tp)
+                        for i, s in enumerate(cfg.stages)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, V, dt)
+    if any("shared_attn" in s.unit for s in cfg.stages):
+        params["shared"] = block_init(ks[3], "attn", cfg, tp)
+    if cfg.encoder_stages is not None:
+        params["encoder"] = {
+            "stages": tuple(stage_init(jax.random.fold_in(ks[4], i), s, cfg, tp)
+                            for i, s in enumerate(cfg.encoder_stages)),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+    return params
+
+
+# ----------------------------------------------------------------- forward
+def encode(params, frames, cfg: ModelConfig, *, remat=False):
+    """Encoder over precomputed frame/patch embeddings (stubbed frontend)."""
+    x = frames.astype(dtype_of(cfg.dtype))
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    for sp, s in zip(params["encoder"]["stages"], cfg.encoder_stages):
+        x = stage_apply(sp, s, x, cfg, positions=pos, causal=False,
+                        remat=remat)
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, context=None,
+            positions=None, remat=False) -> jnp.ndarray:
+    """tokens: (B, S) -> logits (B, S, padded_vocab).
+
+    ``context`` feeds cross-attention ('cross'/'decoder' blocks): encoder
+    output (audio), or patch embeddings (vlm) straight from input_specs.
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]),
+                                     tokens.shape)
+    for sp, s in zip(params["stages"], cfg.stages):
+        x = stage_apply(sp, s, x, cfg, positions=positions, context=context,
+                        shared=params.get("shared"), remat=remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, aux_weight=0.01,
+            remat=False):
+    """batch: {'tokens': (B,S), 'labels': (B,S), 'context'?: (B,Sc,d)}."""
+    logits = forward(params, batch["tokens"], cfg,
+                     context=batch.get("context"), remat=remat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    labels = jnp.maximum(batch["labels"], 0)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ------------------------------------------------------------------- decode
+@dataclasses.dataclass
+class CacheSpec:
+    max_seq: int
+    batch: int
+    dtype: Any
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None, tp: int = 1) -> Tuple:
+    """Cache pytree mirroring stage structure. Per unit element:
+      attn-like -> (k, v): (repeats, B, S, hkv, hd)
+      mla       -> ckv:    (repeats, B, S, r + rope)
+      mamba     -> (conv_state, ssm_state) stacked on repeats
+      decoder   -> (k, v) self-cache (cross k/v recomputed from context)
+      cross     -> None
+    """
+    dt = dtype or dtype_of(cfg.dtype)
+    has_attn = any(k != "mamba" for st in cfg.stages for k in st.unit)
+    hkv = attn.head_counts(cfg, tp)[1] if has_attn else 0
+    caches = []
+    for s in cfg.stages:
+        unit_caches = []
+        for kind in s.unit:
+            if kind in ("attn", "attn_local", "moe", "decoder", "shared_attn"):
+                length = max_seq
+                if kind == "attn_local" and cfg.sliding_window:
+                    length = min(max_seq, cfg.sliding_window)  # ring buffer
+                shape = (s.repeats, batch, length, hkv, cfg.head_dim)
+                unit_caches.append((jnp.zeros(shape, dt),
+                                    jnp.zeros(shape, dt)))
+            elif kind in ("mla_dense", "mla_moe"):
+                shape = (s.repeats, batch, max_seq,
+                         cfg.kv_lora_rank + cfg.qk_rope_dim)
+                unit_caches.append(jnp.zeros(shape, dt))
+            elif kind == "mamba":
+                cx, cbc, ssm = mamba2.mamba_cache_init(cfg, batch, dt)
+                unit_caches.append(tuple(
+                    jnp.zeros((s.repeats,) + c.shape, c.dtype)
+                    for c in (cx, cbc, ssm)))
+            else:  # cross
+                unit_caches.append(None)
+        caches.append(tuple(unit_caches))
+    return tuple(caches)
+
+
+def _block_decode(p, kind, x, cache, cfg, *, pos, context, shared):
+    if kind == "shared_attn":
+        p, kind = shared, "attn"
+    if kind in ("attn", "attn_local", "moe", "decoder"):
+        window = cfg.sliding_window if kind == "attn_local" else None
+        ck, cv = cache
+        a, ck, cv = attn.gqa_decode(p["attn"], _pre(x, p["ln1"], cfg), cfg,
+                                    cache_k=ck, cache_v=cv, pos=pos,
+                                    window=window)
+        if cfg.use_post_norm and "post_ln1" in p:
+            a = _pre(a, p["post_ln1"], cfg)
+        x = x + a
+        if kind == "decoder":
+            x = x + attn.cross_apply(p["cross"], _pre(x, p["lnc"], cfg),
+                                     context, cfg)
+        h = _pre(x, p["ln2"], cfg)
+        m = moe_mod.moe_apply(p["moe"], h, cfg) if kind == "moe" else \
+            mlp_apply(p["mlp"], h, cfg.mlp_act)
+        if cfg.use_post_norm and "post_ln2" in p:
+            m = _pre(m, p["post_ln2"], cfg)
+        return x + m, (ck, cv)
+    if kind in ("mla_dense", "mla_moe"):
+        a, ckv = attn.mla_decode(p["attn"], _pre(x, p["ln1"], cfg), cfg,
+                                 cache_ckv=cache, pos=pos)
+        x = x + a
+        h = _pre(x, p["ln2"], cfg)
+        m = moe_mod.moe_apply(p["moe"], h, cfg) if kind == "mla_moe" else \
+            mlp_apply(p["mlp"], h, cfg.mlp_act)
+        return x + m, ckv
+    if kind == "cross":
+        x = x + attn.cross_apply(p["cross"], _pre(x, p["ln1"], cfg),
+                                 context, cfg)
+        return x + mlp_apply(p["mlp"], _pre(x, p["ln2"], cfg),
+                             cfg.mlp_act), None
+    if kind == "mamba":
+        cx, cbc, ssm = cache
+        y, cx, cbc, ssm = mamba2.mamba_decode(
+            p["mamba"], _pre(x, p["ln1"], cfg), cfg,
+            conv_x=cx, conv_bc=cbc, ssm_state=ssm)
+        return x + y, (cx, cbc, ssm)
+    raise ValueError(kind)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *,
+                context=None):
+    """One token for every sequence. tokens: (B,1) int; pos: (B,) lengths.
+    Returns (logits (B,1,V), new_cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    new_caches = []
+    for sp, s, sc in zip(params["stages"], cfg.stages, cache):
+        def body(h, xs):
+            layer_p, layer_c = xs
+            new_c = []
+            for j, kind in enumerate(s.unit):
+                h, c = _block_decode(layer_p[j], kind, h, layer_c[j], cfg,
+                                     pos=pos, context=context,
+                                     shared=params.get("shared"))
+                new_c.append(c)
+            return h, tuple(new_c)
+        x, new_sc = jax.lax.scan(body, x, (sp, sc))
+        new_caches.append(new_sc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap((x @ head).astype(jnp.float32), cfg.final_softcap)
+    return logits, tuple(new_caches)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

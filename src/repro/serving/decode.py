@@ -1,0 +1,100 @@
+"""Distributed serving: seq-sharded flash-decoding + serve/prefill steps.
+
+Decode cache layout (distributed/sharding.cache_specs): batch over DP axes,
+cache *sequence* over the 'model' axis — uniform across kv-head counts (the
+assigned archs have kv in {1..32}, which can't all head-shard 16 ways).
+Attention per step:
+  1. every model rank computes unnormalized (acc, m, l) over its local
+     cache chunk (kernels ref partials / Pallas kernel on TPU);
+  2. ranks combine with a log-sum-exp psum (flash-decoding):
+       m* = pmax(m);  l* = psum(l e^{m-m*});  o = psum(acc e^{m-m*}) / l*.
+Cache-bandwidth (the decode bottleneck) is thus split tp-ways; q/o are the
+only per-layer cross-rank tensors (tiny: B x Hq x hd).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import ctx
+from repro.kernels import ref as kref
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+
+
+def sharded_decode_attention(q, k, v, kv_len, *, window=None, softcap=None):
+    """q: (B,Hq,D) k/v: (B,S,Hkv,D/Dv) seq-sharded over 'model'."""
+    mesh = ctx.mesh()
+    tp = ctx.model_axis_size()
+    dp = ctx.dp_axes()
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    B = q.shape[0]
+    if B % dp_total != 0:      # e.g. long_500k batch=1: replicate over DP
+        dps = None
+    else:
+        dps = dp if len(dp) > 1 else dp[0]
+    S = k.shape[1]
+    s_loc = S // tp
+
+    def local(q, k, v, kv_len):
+        idx = jax.lax.axis_index("model")
+        start = idx * s_loc
+        local_len = jnp.clip(kv_len - start, 0, s_loc)
+        acc, m, l = kref.decode_attention_partials(
+            q, k, v, local_len, offset=start, global_len=kv_len,
+            window=window, softcap=softcap)
+        m_star = jax.lax.pmax(m, "model")
+        w = jnp.exp(m - m_star)
+        l_star = jax.lax.psum(l * w, "model")
+        o = jax.lax.psum(acc * w[..., None], "model")
+        return (o / jnp.maximum(l_star, 1e-30)[..., None]).astype(q.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dps, None, None), P(dps, "model", None, None),
+                  P(dps, "model", None, None), P(dps)),
+        out_specs=P(dps, None, None), check_vma=False,
+    )(q, k, v, kv_len)
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    """jit'd serve step: (params, cache, tokens (B,1), pos (B,), context?)."""
+
+    def step(params, cache, tokens, pos, context=None):
+        return tr.decode_step(params, cache, tokens, pos, cfg,
+                              context=context)
+
+    if mesh is None:
+        return jax.jit(step)
+
+    def traced(params, cache, tokens, pos, context=None):
+        with ctx.activate(mesh):
+            return jax.jit(step, donate_argnums=(1,))(
+                params, cache, tokens, pos, context)
+
+    return traced
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    """jit'd prefill: (params, tokens (B,S), context?) -> logits."""
+
+    def step(params, tokens, context=None):
+        if cfg.encoder_stages is not None:
+            context = tr.encode(params, context, cfg)
+        return tr.forward(params, tokens, cfg, context=context)
+
+    if mesh is None:
+        return jax.jit(step)
+
+    def traced(params, tokens, context=None):
+        with ctx.activate(mesh):
+            return jax.jit(step)(params, tokens, context)
+
+    return traced

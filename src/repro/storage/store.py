@@ -1,0 +1,157 @@
+"""Tiered cloud object store simulation with exact paper billing semantics.
+
+Objects live in one of L tiers; every put/get/tier-change is metered with the
+:class:`~repro.core.costs.CostTable` parameters (storage-month accrual, read
+and write cents/GB, early-deletion penalties, TTFB latency simulation).
+
+This is the storage substrate under the checkpoint manager and the training
+data loader; it is also what the SCOPe pipeline optimizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Optional
+
+from repro.core.costs import CostTable, azure_table
+from repro.storage.codecs import Codec, codec_by_name
+
+
+@dataclasses.dataclass
+class BillingMeter:
+    """Accrues cents, mirrors the paper's cost break-up columns."""
+
+    storage_cents: float = 0.0
+    read_cents: float = 0.0
+    write_cents: float = 0.0
+    compute_cents: float = 0.0      # decompression compute
+    penalty_cents: float = 0.0      # early-deletion charges
+    ttfb_seconds: float = 0.0       # accumulated simulated read latency
+    decomp_seconds: float = 0.0
+    n_reads: int = 0
+    n_writes: int = 0
+
+    @property
+    def total_cents(self) -> float:
+        return (self.storage_cents + self.read_cents + self.write_cents
+                + self.compute_cents + self.penalty_cents)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self) | {"total_cents": self.total_cents}
+
+
+@dataclasses.dataclass
+class _Obj:
+    payload: bytes
+    raw_gb: float
+    stored_gb: float
+    tier: int
+    codec: str
+    created_month: float
+    moved_month: float
+
+
+class TieredStore:
+    """In-memory multi-tier object store with cost metering.
+
+    Time is *logical months* advanced by :meth:`advance_months` — storage cost
+    accrues per object-month, exactly like a cloud bill at the end of a
+    billing period (paper §III).
+    """
+
+    def __init__(self, table: Optional[CostTable] = None,
+                 simulate_latency: bool = False):
+        self.table = table or azure_table()
+        self.meter = BillingMeter()
+        self.simulate_latency = simulate_latency
+        self._objs: Dict[str, _Obj] = {}
+        self._month = 0.0
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ time
+    @property
+    def month(self) -> float:
+        return self._month
+
+    def advance_months(self, months: float) -> None:
+        """Advance logical time, accruing storage cost for everything held."""
+        with self._lock:
+            for o in self._objs.values():
+                self.meter.storage_cents += (
+                    o.stored_gb * self.table.storage_cents_gb_month[o.tier] * months)
+            self._month += months
+
+    # ------------------------------------------------------------------- ops
+    def put(self, key: str, raw: bytes, tier: int, codec: str = "none") -> int:
+        c = codec_by_name(codec)
+        payload = c.compress(raw)
+        raw_gb = len(raw) / 1e9
+        stored_gb = len(payload) / 1e9
+        with self._lock:
+            self.meter.write_cents += stored_gb * self.table.write_cents_gb[tier]
+            self.meter.n_writes += 1
+            self._objs[key] = _Obj(payload, raw_gb, stored_gb, tier, codec,
+                                   self._month, self._month)
+        return len(payload)
+
+    def get(self, key: str) -> bytes:
+        o = self._objs[key]
+        with self._lock:
+            self.meter.read_cents += o.stored_gb * self.table.read_cents_gb[o.tier]
+            self.meter.ttfb_seconds += float(self.table.ttfb_seconds[o.tier])
+            self.meter.n_reads += 1
+        if self.simulate_latency:
+            time.sleep(min(float(self.table.ttfb_seconds[o.tier]), 0.05))
+        t0 = time.perf_counter()
+        raw = codec_by_name(o.codec).decompress(o.payload)
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.meter.decomp_seconds += dt
+            self.meter.compute_cents += dt * self.table.compute_cents_sec
+        return raw
+
+    def change_tier(self, key: str, new_tier: int) -> None:
+        """Tier change = read from old + write to new (+ early-delete penalty)."""
+        o = self._objs[key]
+        if new_tier == o.tier:
+            return
+        with self._lock:
+            held = self._month - o.moved_month
+            min_stay = float(self.table.early_delete_months[o.tier])
+            if held < min_stay:
+                # prorated remainder of the minimum-stay storage charge
+                self.meter.penalty_cents += (
+                    o.stored_gb * self.table.storage_cents_gb_month[o.tier]
+                    * (min_stay - held))
+            self.meter.read_cents += o.stored_gb * self.table.read_cents_gb[o.tier]
+            self.meter.write_cents += o.stored_gb * self.table.write_cents_gb[new_tier]
+            o.tier = new_tier
+            o.moved_month = self._month
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            o = self._objs.pop(key)
+            held = self._month - o.moved_month
+            min_stay = float(self.table.early_delete_months[o.tier])
+            if held < min_stay:
+                self.meter.penalty_cents += (
+                    o.stored_gb * self.table.storage_cents_gb_month[o.tier]
+                    * (min_stay - held))
+
+    # ----------------------------------------------------------------- intro
+    def tier_of(self, key: str) -> int:
+        return self._objs[key].tier
+
+    def stored_gb(self, key: str) -> float:
+        return self._objs[key].stored_gb
+
+    def keys(self):
+        return list(self._objs)
+
+    def tier_usage_gb(self) -> Dict[int, float]:
+        usage: Dict[int, float] = {t: 0.0 for t in range(self.table.num_tiers)}
+        for o in self._objs.values():
+            usage[o.tier] += o.stored_gb
+        return usage

@@ -1,0 +1,82 @@
+"""Int8 error-feedback gradient all-reduce (QSGD/1-bit-Adam style) over the
+DP mesh axes, built on shard_map + quant_pack.
+
+Scheme per leaf (flattened to blocks of 256):
+  1. g' = g + err                     (error feedback carry-in)
+  2. q, s = quant8(g')                (local int8 + per-block fp32 scales)
+  3. psum(dequant(q, s)) / n          (wire format int8+scales: 4x fewer
+                                       gradient bytes than fp32; here the
+                                       exchange is expressed as a psum of
+                                       the dequantized tensor so XLA lowers
+                                       a single fused all-reduce — the int8
+                                       wire encoding is what a DCN-aware
+                                       runtime ships, see DESIGN.md)
+  4. err' = g' - dequant(q, s)        (carry-out)
+
+The quantization error never accumulates: it is re-injected next step, so
+AdamW sees an unbiased gradient stream (standard error-feedback guarantee).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+_BLOCK = 256
+
+
+def _quant_leaf(g, e):
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    fp = jnp.pad(flat, (0, pad))
+    fe = jnp.pad(e.astype(jnp.float32).reshape(-1), (0, pad))
+    carried = fp + fe
+    q, s = ops.quant_pack(carried, block=_BLOCK)
+    deq = ops.quant_unpack(q, s)
+    new_err = (carried - deq)[:flat.shape[0]].reshape(g.shape)
+    return deq[:flat.shape[0]].reshape(g.shape), new_err
+
+
+def compressed_mean(grads, err, mesh, dp_axes: Tuple[str, ...]):
+    """Mean of grads across DP axes with int8 error feedback.
+
+    grads/err: pytrees (err may be None -> zeros). Returns (grads', err').
+    Must be called inside jit with ``mesh`` active; gradients are already
+    DP-identical per TP group, so the quantize/psum runs under shard_map
+    with fully-replicated specs on the DP axes.
+    """
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+
+    from jax.sharding import PartitionSpec as P
+
+    def local_fn(*leaves):
+        n = len(leaves) // 2
+        gs, es = leaves[:n], leaves[n:]
+        outs = []
+        for g, e in zip(gs, es):
+            deq, new_e = _quant_leaf(g, e)
+            red = jax.lax.psum(deq, dp_axes) / \
+                jnp.prod(jnp.asarray([mesh.shape[a] for a in dp_axes],
+                                     jnp.float32))
+            outs.append((red, new_e))
+        return tuple(x for pair in outs for x in pair)
+
+    # gradients are replicated across DP (per-TP-shard identical after XLA's
+    # DP all-reduce was *not* yet inserted — we call this on per-device
+    # grads), so specs replicate leaves and psum does the reduction.
+    in_specs = tuple(P() for _ in range(2 * len(flat_g)))
+    out_specs = tuple(P() for _ in range(2 * len(flat_g)))
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    res = fn(*flat_g, *flat_e)
+    new_g = jax.tree.unflatten(treedef, list(res[0::2]))
+    new_e = jax.tree.unflatten(treedef, list(res[1::2]))
+    return new_g, new_e

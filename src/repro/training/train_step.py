@@ -1,0 +1,97 @@
+"""Distributed train step: loss -> grad -> AdamW, with remat, microbatch
+gradient accumulation, and (optionally) int8 error-feedback gradient
+compression over the DP axes.
+
+The step is a single jit-compiled function; parameter/optimizer sharding
+comes from distributed.sharding.param_specs, batch sharding from
+batch_specs. XLA SPMD inserts the DP all-reduce; the compressed variant
+replaces it with an explicit shard_map QSGD-style exchange
+(training/grad_compression.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = dataclasses.field(default_factory=opt.AdamWConfig)
+    remat: bool = True
+    microbatches: int = 1
+    compressed_grads: bool = False
+
+
+class TrainState(dict):
+    """{'params': compute-dtype params, 'opt': AdamWState}."""
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig,
+                     tp: int = 1) -> Dict[str, Any]:
+    params = tr.init_params(key, cfg, tp)
+    return {"params": params, "opt": opt.init_state(params, tcfg.adamw)}
+
+
+def _loss(params, batch, cfg: ModelConfig, remat: bool = False):
+    batch = dict(batch)
+    if cfg.encoder_stages is not None:
+        batch["context"] = tr.encode(params, batch.pop("frames"), cfg,
+                                     remat=remat)
+    return tr.loss_fn(params, batch, cfg, remat=remat)
+
+
+def _grads(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    # remat is PER-BLOCK (inside the layer scan), not whole-loss: a whole-
+    # loss checkpoint still stacks scan-body residuals across layers.
+    loss_f = functools.partial(_loss, remat=tcfg.remat)
+    if tcfg.microbatches <= 1:
+        return jax.value_and_grad(loss_f)(params, batch, cfg)
+
+    # gradient accumulation over leading-batch microbatch slices
+    mb = tcfg.microbatches
+
+    def split(x):
+        return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+    batch_mb = jax.tree.map(split, batch)
+
+    def body(carry, mbatch):
+        loss_acc, grad_acc = carry
+        loss, g = jax.value_and_grad(loss_f)(params, mbatch, cfg)
+        return (loss_acc + loss / mb,
+                jax.tree.map(lambda a, b: a + b / mb, grad_acc, g)), None
+
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero), batch_mb)
+    return loss, grads
+
+
+def train_step(state, batch, cfg: ModelConfig, tcfg: TrainConfig,
+               mesh=None):
+    """state: {'params', 'opt'}; batch: {'tokens','labels',...}."""
+    loss, grads = _grads(state["params"], batch, cfg, tcfg)
+    err = state["opt"].err
+    if tcfg.compressed_grads and mesh is not None:
+        from repro.training.grad_compression import compressed_mean
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        grads, err = compressed_mean(grads, err, mesh, dp)
+    new_params, new_opt = opt.apply_updates(
+        state["opt"]._replace(err=err), grads, tcfg.adamw,
+        compute_dtype=jax.tree.leaves(state["params"])[0].dtype)
+    metrics = {"loss": loss, "step": new_opt.step}
+    return {"params": new_params, "opt": new_opt}, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    """jit-wrapped train_step with donated state."""
+    fn = functools.partial(train_step, cfg=cfg, tcfg=tcfg, mesh=mesh)
+    return jax.jit(fn, donate_argnums=(0,))

@@ -1,0 +1,95 @@
+"""COMPREDICT: features, sampling, prediction quality (paper §V bands)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ml
+from repro.core.compredict import (CompressionPredictor, build_dataset,
+                                   extract_features, query_samples,
+                                   random_samples, train_eval,
+                                   weighted_entropy)
+from repro.data import tpch
+from repro.storage.codecs import codec_by_name
+
+
+@pytest.fixture(scope="module")
+def db():
+    return tpch.generate(scale_rows=4000, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(db):
+    return tpch.generate_queries(db, n_per_template=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def samples(db, queries):
+    return query_samples(queries, db.tables, max_rows=1200)
+
+
+def test_weighted_entropy_repetition_lowers_entropy(db):
+    t = db.tables["lineitem"].head(1000)
+    h_orig = weighted_entropy(t)
+    # constant column set -> much lower string-dtype entropy
+    rep = t.select(np.zeros(1000, int))
+    h_rep = weighted_entropy(rep)
+    assert h_rep["str"] < h_orig["str"]
+    assert h_rep["float"] < h_orig["float"]
+
+
+def test_feature_shapes(db):
+    t = db.tables["orders"].head(500)
+    assert extract_features(t, "row", "size").shape == (3,)
+    f = extract_features(t, "col", "weighted_entropy")
+    assert f.shape == (18,) and np.isfinite(f).all()
+    fb = extract_features(t, "col", "bucketed")
+    assert fb.shape == (18 + 15,)
+
+
+def test_entropy_predicts_ratio_better_than_size(samples):
+    """Paper Table V: queries+weighted_entropy >> random+*; also beats size
+    features on MAPE for gzip-class codecs."""
+    codec = codec_by_name("zlib-6")
+    ds_ent = build_dataset(samples, codec, "row", "weighted_entropy")
+    _, res_rf = train_eval(ds_ent, "RandomForest", "ratio", seed=0)
+    _, res_svr = train_eval(ds_ent, "SVR", "ratio", seed=0)
+    best = max(res_rf.r2, res_svr.r2)
+    assert best > 0.9, f"entropy features R2 too low: {res_rf} {res_svr}"
+    assert min(res_rf.mape, res_svr.mape) < 5.0
+    ds_size = build_dataset(samples, codec, "row", "size")
+    _, res_size = train_eval(ds_size, "SVR", "ratio", seed=0)
+    assert best >= res_size.r2 - 0.02
+
+
+def test_random_samples_worse_than_query_samples(db, queries):
+    codec = codec_by_name("zlib-6")
+    rand = random_samples(db.tables["lineitem"], 40, 800, seed=2)
+    li_queries = [q for q in queries if q.table == "lineitem"]
+    qsamp = query_samples(li_queries, db.tables, max_rows=800)
+    ds_r = build_dataset(rand, codec, "row", "weighted_entropy")
+    ds_q = build_dataset(qsamp, codec, "row", "weighted_entropy")
+    # paper Fig 4: query results (same table) compress better than random
+    # row samples, because selections concentrate repeated values
+    assert ds_q.ratio.mean() > ds_r.ratio.mean()
+
+
+def test_predictor_interface(db, queries, samples):
+    pred = CompressionPredictor().fit(samples[:60], layouts=("col",),
+                                      codecs=[codec_by_name("zstd-3")])
+    t = db.tables["customer"].head(400)
+    r, d = pred.predict(t, "zstd-3", "col")
+    assert r >= 1.0 and d >= 0.0
+    R, D = pred.predict_matrix([t], ["none", "zstd-3"], "col")
+    assert R.shape == (1, 2) and R[0, 0] == 1.0 and D[0, 0] == 0.0
+
+
+def test_layouts_differ(db):
+    t = db.tables["lineitem"].head(2000)
+    row_b = t.serialize("row")
+    col_b = t.serialize("col")
+    assert row_b != col_b
+    from repro.storage.codecs import measure
+    m_row = measure(codec_by_name("zlib-6"), row_b)
+    m_col = measure(codec_by_name("zlib-6"), col_b)
+    # columnar layout groups similar values -> compresses at least as well
+    assert m_col.ratio > 0.8 * m_row.ratio

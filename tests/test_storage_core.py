@@ -1,0 +1,102 @@
+"""Codecs, tiered store billing, cost-model algebra, ML substrate."""
+
+import numpy as np
+import pytest
+
+from repro.core import ml
+from repro.core.costs import azure_table
+from repro.storage.codecs import codec_by_name, default_codecs, measure
+from repro.storage.store import TieredStore
+
+
+def test_codec_roundtrip_lossless():
+    raw = (b"hello world, " * 1000) + bytes(range(256)) * 10
+    for c in default_codecs():
+        if c.lossy:
+            continue
+        assert c.decompress(c.compress(raw)) == raw
+
+
+def test_quant8_roundtrip_approximate():
+    rng = np.random.default_rng(0)
+    f = rng.normal(0, 3, 4096).astype(np.float32)
+    c = codec_by_name("quant8")
+    back = np.frombuffer(c.decompress(c.compress(f.tobytes())), np.float32)
+    assert back.shape == f.shape
+    # per-block int8: relative error bounded by block max / 127
+    assert np.abs(back - f).max() < np.abs(f).max() / 100.0
+    m = measure(c, f.tobytes())
+    assert 3.0 < m.ratio < 4.2
+
+
+def test_compressible_data_compresses():
+    raw = b"abcd" * 50_000
+    m = measure(codec_by_name("zstd-3"), raw)
+    assert m.ratio > 50
+
+
+def test_store_billing_accrual():
+    s = TieredStore()
+    payload = b"x" * 1_000_000  # 1 MB
+    s.put("a", payload, tier=1)
+    s.advance_months(2.0)
+    gb = len(payload) / 1e9
+    assert s.meter.storage_cents == pytest.approx(gb * 2.08 * 2.0)
+    s.get("a")
+    assert s.meter.read_cents == pytest.approx(gb * 0.01331)
+    assert s.meter.n_reads == 1
+
+
+def test_store_tier_change_and_early_delete_penalty():
+    s = TieredStore()
+    s.put("a", b"y" * 2_000_000, tier=3)   # archive: 6-month min stay
+    s.advance_months(1.0)
+    before = s.meter.penalty_cents
+    s.change_tier("a", 1)
+    assert s.meter.penalty_cents > before   # early-deletion charge
+    assert s.tier_of("a") == 1
+
+
+def test_store_compression_reduces_stored_size():
+    s = TieredStore()
+    raw = b"z" * 500_000
+    n = s.put("a", raw, tier=1, codec="zstd-3")
+    assert n < len(raw) / 100
+    assert s.get("a") == raw
+    assert s.meter.compute_cents > 0       # decompression was metered
+
+
+def test_ml_random_forest_regression():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-2, 2, (300, 3))
+    y = X[:, 0] ** 2 + 0.5 * X[:, 1] + 0.1 * rng.normal(size=300)
+    m = ml.RandomForest(n_trees=15, max_depth=8).fit(X[:200], y[:200])
+    assert ml.r2(y[200:], m.predict(X[200:])) > 0.85
+
+
+def test_ml_mlp_regression():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(-2, 2, (400, 2))
+    y = np.sin(X[:, 0]) + X[:, 1]
+    m = ml.MLP(hidden=(32, 32), epochs=300).fit(X[:300], y[:300])
+    assert ml.r2(y[300:], m.predict(X[300:])) > 0.9
+
+
+def test_ml_classifier_and_metrics():
+    rng = np.random.default_rng(2)
+    X = rng.normal(0, 1, (400, 4))
+    y = (X[:, 0] + X[:, 1] > 0).astype(int)
+    m = ml.RandomForest(n_trees=20, max_depth=6, task="clf", n_classes=2)
+    m.fit(X[:300], y[:300])
+    pred = m.predict(X[300:])
+    assert ml.f1_binary(y[300:], pred) > 0.85
+    conf = ml.confusion(y[300:], pred, 2)
+    assert conf.sum() == 100
+
+
+def test_kernel_ridge():
+    rng = np.random.default_rng(3)
+    X = rng.uniform(-1, 1, (200, 2))
+    y = X[:, 0] * X[:, 1]
+    m = ml.KernelRidge(alpha=1e-3).fit(X[:150], y[:150])
+    assert ml.r2(y[150:], m.predict(X[150:])) > 0.8

@@ -15,6 +15,7 @@ MODULES = [
     ("tablesV-VIII", "benchmarks.bench_compredict"),
     ("fig7", "benchmarks.bench_gpart"),
     ("tablesIX-XI", "benchmarks.bench_scope_pipeline"),
+    ("reopt", "benchmarks.bench_reoptimize"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

@@ -33,12 +33,12 @@ import numpy as np
 
 from repro.core.costs import CostTable, Weights, cost_tensor, latency_feasible
 from repro.core.optassign import greedy_assign
-from repro.storage.codecs import codec_by_name, measure
+from repro.storage.codecs import available_schemes, codec_by_name, measure
 from repro.storage.store import TieredStore
 
 SHARD_BYTES = 4 << 20          # 4 MiB shards
 SAMPLE_BYTES = 64 << 10
-CANDIDATE_CODECS = ("none", "zlib-1", "zstd-3", "lzma-1")
+CANDIDATE_CODECS = available_schemes(("none", "zlib-1", "zstd-3", "lzma-1"))
 
 
 @dataclasses.dataclass

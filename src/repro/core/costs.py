@@ -139,6 +139,24 @@ def cost_tensor(
     return storage_cost + access_cost
 
 
+def early_delete_penalty_gb(
+    table: CostTable,
+    current_tier: np.ndarray,      # (N,) in {-1, 0..L-1}; -1 = new data
+    months_held: "float | np.ndarray" = 0.0,
+) -> np.ndarray:
+    """Per-GB charge if a partition leaves ``current_tier`` now, shape (N,).
+
+    The prorated remainder of the tier's minimum-stay storage charge —
+    mirrors ``TieredStore.change_tier`` / ``delete`` semantics. Zero for new
+    data (tier -1) and for tiers without a minimum stay.
+    """
+    cur = np.asarray(current_tier, int)
+    held = np.broadcast_to(np.asarray(months_held, np.float64), cur.shape)
+    safe = np.maximum(cur, 0)
+    due = np.maximum(0.0, table.early_delete_months[safe] - held)
+    return np.where(cur >= 0, due * table.storage_cents_gb_month[safe], 0.0)
+
+
 def latency_feasible(
     decomp_sec: np.ndarray,       # (N,K)
     latency_threshold: np.ndarray,  # (N,)

@@ -8,8 +8,12 @@ Solvers
                         (Thm 2) via min-cost flow == min-weight bipartite
                         matching on tier copies.
 ``capacitated_assign``  general capacitated case (strongly NP-hard, Thm 1):
-                        Lagrangian dual ascent + greedy repair + 1-swap local
-                        search; validated against ``brute_force`` in tests.
+                        vectorized JAX Lagrangian dual ascent (jitted scan over
+                        all N*L*K cells) + argsort-based greedy repair +
+                        delta-matrix 1-swap local search; validated against
+                        ``brute_force`` in tests.
+``capacitated_assign_ref``  the original pure-Python solver, kept as the
+                        correctness reference for the vectorized path.
 ``brute_force``         exact enumeration oracle for tiny instances.
 
 All solvers consume the (N,L,K) cost tensor and (N,L,K) feasibility mask from
@@ -20,6 +24,7 @@ uniformly upstream.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from functools import partial
@@ -49,15 +54,10 @@ def lock_schemes(feasible: np.ndarray, locked_scheme: np.ndarray) -> np.ndarray:
 
     ``locked_scheme[n] == -1`` means partition n is new (free choice).
     """
-    N, L, K = feasible.shape
-    mask = feasible.copy()
-    for n in range(N):
-        k = int(locked_scheme[n])
-        if k >= 0:
-            keep = np.zeros(K, bool)
-            keep[k] = True
-            mask[n] &= keep[None, :]
-    return mask
+    K = feasible.shape[2]
+    locked = np.asarray(locked_scheme).astype(int)
+    keep = (locked[:, None] < 0) | (np.arange(K)[None, :] == locked[:, None])
+    return feasible & keep[:, None, :]
 
 
 # --------------------------------------------------------------------- greedy
@@ -109,10 +109,10 @@ class _MCMF:
             in_q = [False] * self.n
             prev_e = [-1] * self.n
             dist[s] = 0.0
-            queue = [s]
+            queue = collections.deque([s])
             in_q[s] = True
             while queue:
-                u = queue.pop(0)
+                u = queue.popleft()
                 in_q[u] = False
                 for e in self.head[u]:
                     if self.cap[e] > 1e-12 and dist[u] + self.cost[e] < dist[self.to[e]] - 1e-12:
@@ -172,13 +172,103 @@ def matching_assign(cost_nl: np.ndarray, feasible_nl: np.ndarray,
 
 
 # ---------------------------------------------------------------- capacitated
-def _usage(stored_gb_nlk: np.ndarray, tier: np.ndarray, scheme: np.ndarray,
-           L: int) -> np.ndarray:
-    N = tier.shape[0]
-    use = np.zeros(L)
-    for n in range(N):
-        use[tier[n]] += stored_gb_nlk[n, tier[n], scheme[n]]
+def _chosen_usage(stored_gb: np.ndarray, tier: np.ndarray,
+                  scheme: np.ndarray) -> np.ndarray:
+    """Per-tier GB occupied by the chosen (tier, scheme) cells, shape (L,)."""
+    use = np.zeros(stored_gb.shape[1])
+    np.add.at(use, tier, stored_gb[np.arange(tier.shape[0]), tier, scheme])
     return use
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def _lagrangian_scan(masked: jnp.ndarray, stored: jnp.ndarray,
+                     cap: jnp.ndarray, finite_cap: jnp.ndarray,
+                     step0: jnp.ndarray, iters: int):
+    """Jitted dual ascent over all N*L*K cells; one candidate per step."""
+    N, L, K = masked.shape
+    flat_cost = masked.reshape(N, -1)
+    flat_stored = stored.reshape(N, -1)
+
+    def body(lam, it):
+        adj = flat_cost + (lam[None, :, None] * stored).reshape(N, -1)
+        idx = jnp.argmin(adj, axis=1)
+        chosen = jnp.take_along_axis(flat_stored, idx[:, None], axis=1)[:, 0]
+        use = jnp.zeros(L, masked.dtype).at[idx // K].add(chosen)
+        grad = jnp.where(finite_cap, use - cap, 0.0)
+        lam = jnp.maximum(0.0, lam + step0 / (1.0 + it) * grad)
+        return lam, idx
+
+    _, cells = jax.lax.scan(body, jnp.zeros(L, masked.dtype),
+                            jnp.arange(iters, dtype=masked.dtype))
+    return cells                                    # (iters, N) flat indices
+
+
+def _repair_vec(tier: np.ndarray, scheme: np.ndarray, masked: np.ndarray,
+                stored: np.ndarray, cap: np.ndarray,
+                finite_cap: np.ndarray) -> Optional[np.ndarray]:
+    """Argsort-based greedy repair: evict cheapest-delta members of the most
+    over-capacity tier until every finite capacity is respected."""
+    N, L, K = masked.shape
+    use = _chosen_usage(stored, tier, scheme)
+    for _ in range(4 * N + 8):
+        over = np.where(finite_cap & (use > cap + 1e-9))[0]
+        if over.size == 0:
+            return use
+        l = over[np.argmax(use[over] - cap[over])]
+        members = np.where(tier == l)[0]
+        if members.size == 0:
+            return None
+        cur = masked[members, l, scheme[members]]
+        room = np.where(finite_cap, cap - use, np.inf)
+        ok = (masked[members] < BIG) & (stored[members]
+                                        <= room[None, :, None] + 1e-9)
+        ok[:, l, :] = False
+        delta = np.where(ok, masked[members] - cur[:, None, None],
+                         np.inf).reshape(members.size, -1)
+        best_cell = delta.argmin(1)
+        best_delta = delta[np.arange(members.size), best_cell]
+        moved = False
+        for m in np.argsort(best_delta):
+            if use[l] <= cap[l] + 1e-9:
+                break
+            if not np.isfinite(best_delta[m]):
+                break
+            l2, k2 = divmod(int(best_cell[m]), K)
+            n = int(members[m])
+            room2 = cap[l2] - use[l2] if finite_cap[l2] else np.inf
+            if stored[n, l2, k2] > room2 + 1e-9:
+                continue             # room shrank this batch; retry next round
+            use[l] -= stored[n, l, scheme[n]]
+            use[l2] += stored[n, l2, k2]
+            tier[n], scheme[n] = l2, k2
+            moved = True
+        if not moved:
+            return None
+    return None
+
+
+def _local_search_vec(tier: np.ndarray, scheme: np.ndarray, use: np.ndarray,
+                      masked: np.ndarray, stored: np.ndarray, cap: np.ndarray,
+                      finite_cap: np.ndarray) -> None:
+    """Best-improvement 1-swap descent with a full (N,L,K) delta matrix."""
+    N, L, K = masked.shape
+    n_idx = np.arange(N)
+    for _ in range(8 * N + 64):
+        cur = masked[n_idx, tier, scheme]
+        stored_cur = stored[n_idx, tier, scheme]
+        same = (np.arange(L)[None, :] == tier[:, None])[:, :, None]  # (N,L,1)
+        eff = use[None, :, None] + stored - same * stored_cur[:, None, None]
+        ok = (masked < BIG) & (~finite_cap[None, :, None]
+                               | (eff <= cap[None, :, None] + 1e-9))
+        delta = np.where(ok, masked - cur[:, None, None], np.inf)
+        j = int(delta.argmin())
+        n, rem = divmod(j, L * K)
+        l2, k2 = divmod(rem, K)
+        if not delta[n, l2, k2] < -1e-12:
+            break
+        use[tier[n]] -= stored[n, tier[n], scheme[n]]
+        use[l2] += stored[n, l2, k2]
+        tier[n], scheme[n] = l2, k2
 
 
 def capacitated_assign(
@@ -188,8 +278,78 @@ def capacitated_assign(
     capacity_gb: np.ndarray,     # (L,)
     iters: int = 200,
     seed: int = 0,
+    max_candidates: int = 16,
 ) -> Assignment:
-    """General OPTASSIGN with capacities: Lagrangian + repair + local search."""
+    """Vectorized capacitated OPTASSIGN.
+
+    The Lagrangian inner solves run as one jitted ``lax.scan`` on device; the
+    distinct relaxed assignments it emits are then repaired (argsort eviction)
+    and polished (delta-matrix 1-swap descent) in vectorized NumPy, scoring in
+    f64. Matches :func:`brute_force` on tiny instances and is orders of
+    magnitude faster than :func:`capacitated_assign_ref` at N >= 1000.
+    """
+    N, L, K = cost.shape
+    masked = _masked(np.asarray(cost, np.float64), feasible)
+    stored = np.asarray(stored_gb, np.float64)
+    cap = np.asarray(capacity_gb, np.float64)
+    finite_cap = np.isfinite(cap)
+
+    # lam=0 greedy = the unconstrained optimum; if it fits the capacities it
+    # is optimal outright and the dual ascent can be skipped entirely.
+    cell0 = masked.reshape(N, -1).argmin(1)
+    tier0, scheme0 = cell0 // K, cell0 % K
+    use0 = _chosen_usage(stored, tier0, scheme0)
+    if (~finite_cap | (use0 <= cap + 1e-9)).all():
+        total = float(masked[np.arange(N), tier0, scheme0].sum())
+        ok = bool(total < BIG)
+        return Assignment(tier0, scheme0, total if ok else float("inf"), ok)
+
+    finite_cells = masked[masked < BIG]
+    step0 = (finite_cells.mean() / max(cap[finite_cap].mean(), 1e-9)
+             if finite_cap.any() and finite_cells.size else 0.0)
+    cells = np.asarray(_lagrangian_scan(
+        jnp.asarray(masked), jnp.asarray(stored), jnp.asarray(cap),
+        jnp.asarray(finite_cap), jnp.float32(step0), iters))
+
+    uniq, seen = [], set()
+    for row_ in cells:
+        key = row_.tobytes()
+        if key not in seen:
+            seen.add(key)
+            uniq.append(np.asarray(row_, np.int64))
+    if len(uniq) > max_candidates:
+        head = max_candidates // 4
+        uniq = uniq[:head] + uniq[-(max_candidates - head):]
+
+    best: Optional[Assignment] = None
+    fallback: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    for cand in uniq:
+        tier, scheme = cand // K, cand % K
+        if fallback is None:
+            fallback = (tier.copy(), scheme.copy())
+        use = _repair_vec(tier, scheme, masked, stored, cap, finite_cap)
+        if use is None:
+            continue
+        _local_search_vec(tier, scheme, use, masked, stored, cap, finite_cap)
+        total = float(masked[np.arange(N), tier, scheme].sum())
+        if total < BIG and (best is None or total < best.cost):
+            best = Assignment(tier.copy(), scheme.copy(), total, True)
+    if best is None:
+        tier, scheme = fallback if fallback is not None else (
+            np.zeros(N, np.int64), np.zeros(N, np.int64))
+        return Assignment(tier, scheme, float("inf"), False)
+    return best
+
+
+def capacitated_assign_ref(
+    cost: np.ndarray,            # (N,L,K)
+    feasible: np.ndarray,        # (N,L,K)
+    stored_gb: np.ndarray,       # (N,L,K) size occupied if cell chosen
+    capacity_gb: np.ndarray,     # (L,)
+    iters: int = 200,
+    seed: int = 0,
+) -> Assignment:
+    """Pure-Python reference: Lagrangian + repair + local search (original)."""
     N, L, K = cost.shape
     masked = _masked(cost, feasible)
     lam = np.zeros(L)
@@ -207,7 +367,7 @@ def capacitated_assign(
 
     def repair_and_score(tier: np.ndarray, scheme: np.ndarray) -> Assignment:
         tier, scheme = tier.copy(), scheme.copy()
-        use = _usage(stored_gb, tier, scheme, L)
+        use = _chosen_usage(stored_gb, tier, scheme)
         # Greedy repair: move cheapest-delta items out of over-capacity tiers.
         for l in np.argsort(-(use - cap)):
             while finite_cap[l] and use[l] > cap[l] + 1e-9:
@@ -264,7 +424,7 @@ def capacitated_assign(
         cand = repair_and_score(tier, scheme)
         if cand.feasible and (best is None or cand.cost < best.cost):
             best = cand
-        use = _usage(stored_gb, tier, scheme, L)
+        use = _chosen_usage(stored_gb, tier, scheme)
         grad = np.where(finite_cap, use - cap, 0.0)
         if np.all(grad <= 1e-9) and it > 0:
             break

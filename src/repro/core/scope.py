@@ -1,86 +1,41 @@
-"""SCOPe — the unified pipeline (paper §VII).
+"""SCOPe — compatibility facade over the staged PlacementEngine (paper §VII).
 
-G-PART (partitioning) -> COMPREDICT (compression prediction) -> OPTASSIGN
-(tier + scheme assignment), with the paper's ablation flags:
+The pipeline itself now lives in :mod:`repro.core.engine` as four composable
+stages exchanging typed payloads::
 
- * P/T/C toggles reproduce the baseline adaptations of Tables IX–XI
+    PartitionStage -> CompressStage -> AssignStage -> BillingStage
+    (G-PART)          (COMPREDICT)     (OPTASSIGN)     (array-math billing)
+
+plus :meth:`~repro.core.engine.PlacementEngine.reoptimize` for online
+re-optimization under access-pattern drift. This module keeps the legacy
+surface:
+
+ * ``run_pipeline`` — one-shot batch optimization returning the same
+   :class:`PipelineReport` as the original monolith;
+ * ``paper_variants`` — the P/T/C ablation grid of Tables IX–XI
    (Ares = C only, Hermes = T only, HCompress = latency-focused T+C,
-   '+ G-PART' rows = same with P on);
- * weights select the 'latency focused' / 'read+decomp focused' /
-   'total cost focused' SCOPe variants;
- * ``capacity`` switches greedy (Thm 3) vs capacitated solving.
+   '+ G-PART' rows = same with P on), with weights selecting the
+   'latency focused' / 'read+decomp focused' / 'total cost focused'
+   SCOPe variants and ``capacity`` switching greedy (Thm 3) vs
+   capacitated solving.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
 from repro.core import datapart
-from repro.core.compredict import CompressionPredictor
-from repro.core.costs import (CostTable, Weights, cost_tensor,
-                              latency_feasible, TIER_NAMES)
-from repro.core.optassign import (Assignment, capacitated_assign, greedy_assign)
+from repro.core.costs import CostTable, Weights
+from repro.core.engine import (MigrationPlan, PipelineReport, PlacementEngine,
+                               PlacementPlan, PlacementProblem, ScopeConfig)
 from repro.data.tables import Table
-from repro.storage.codecs import codec_by_name, measure
 
-
-@dataclasses.dataclass
-class ScopeConfig:
-    use_partitioning: bool = True
-    use_tiering: bool = True
-    use_compression: bool = True
-    weights: Weights = dataclasses.field(default_factory=Weights)
-    months: float = 5.5                      # paper's evaluation window
-    schemes: Sequence[str] = ("none", "zlib-1", "zstd-3", "zstd-19", "lzma-1")
-    layout: str = "col"
-    capacity_gb: Optional[np.ndarray] = None  # None = unbounded (greedy path)
-    latency_sla_sec: float = np.inf
-    tier_whitelist: Optional[Sequence[int]] = None  # e.g. (0,1,2) = no archive
-    s_thresh_mult: float = 3.0               # G-PART span cap, x median family span
-    rho_c: float = 4.0
-    rho_c_abs: float = 10.0
-    predictor: str = "truth"                 # 'truth' | 'model'
-    fixed_tier: Optional[int] = None         # e.g. 0 -> 'store on premium'
-
-
-@dataclasses.dataclass
-class PipelineReport:
-    storage_cents: float
-    decomp_cents: float
-    read_cents: float
-    total_cents: float
-    read_latency_ttfb: float          # access-weighted mean TTFB (s)
-    decomp_latency_ms: float          # access-weighted mean decompression (ms)
-    tiering_scheme: List[int]         # partitions per tier
-    n_partitions: int
-    assignment: Assignment
-    spans_gb: np.ndarray
-    rho: np.ndarray
-    schemes: Sequence[str]
-
-
-def _partition_tables(parts: Sequence[datapart.Partition],
-                      file_rows: Dict[str, Tuple[Table, np.ndarray]]) -> List[Table]:
-    """Materialize each partition as the concatenation of its files' rows."""
-    out: List[Table] = []
-    for p in parts:
-        tabs: Dict[str, List[np.ndarray]] = {}
-        base: Optional[Table] = None
-        per_table: Dict[str, List[np.ndarray]] = {}
-        for f in sorted(p.files):
-            t, idx = file_rows[f]
-            per_table.setdefault(t.name, []).append(idx)
-            base = base or t
-        # A query family touches exactly one table in our workload; guard anyway.
-        name = max(per_table, key=lambda n: sum(len(i) for i in per_table[n]))
-        t0 = [file_rows[f][0] for f in sorted(p.files)
-              if file_rows[f][0].name == name][0]
-        idx = np.sort(np.concatenate(per_table[name]))
-        out.append(t0.select(idx))
-    return out
+__all__ = [
+    "MigrationPlan", "PipelineReport", "PlacementEngine", "PlacementPlan",
+    "PlacementProblem", "ScopeConfig", "paper_variants", "run_pipeline",
+]
 
 
 def run_pipeline(
@@ -89,89 +44,8 @@ def run_pipeline(
     table: CostTable,
     cfg: ScopeConfig,
 ) -> PipelineReport:
-    # ---------------------------------------------------------- partitioning
-    if cfg.use_partitioning:
-        med = float(np.median([p.span for p in parts])) if parts else 0.0
-        merged = datapart.g_part(parts, s_thresh=cfg.s_thresh_mult * med,
-                                 rho_c=cfg.rho_c, rho_c_abs=cfg.rho_c_abs)
-    else:
-        # paper's non-partitioned baselines treat each DATASET (table) as
-        # one partition: every access scans its whole table
-        by_table: Dict[str, List[datapart.Partition]] = {}
-        for p in parts:
-            tname = sorted(p.files)[0].split("/")[0]
-            by_table.setdefault(tname, []).append(p)
-        merged = []
-        for group in by_table.values():
-            merged.extend(datapart.merge_all(group))
-    tables = _partition_tables(merged, file_rows)
-    raw_bytes = [t.serialize(cfg.layout) for t in tables]
-    spans_gb = np.array([len(b) / 1e9 for b in raw_bytes])
-    rho = np.array([p.rho for p in merged])
-    N = len(merged)
-
-    # ----------------------------------------------------------- compression
-    schemes = list(cfg.schemes) if cfg.use_compression else ["none"]
-    K = len(schemes)
-    R = np.ones((N, K))
-    D = np.zeros((N, K))
-    if cfg.use_compression:
-        if cfg.predictor == "truth":
-            for i, b in enumerate(raw_bytes):
-                for k, s in enumerate(schemes):
-                    if s == "none":
-                        continue
-                    m = measure(codec_by_name(s), b)
-                    R[i, k] = m.ratio
-                    D[i, k] = m.decompress_sec_per_gb * (len(b) / 1e9)
-        else:
-            pred: CompressionPredictor = cfg.predictor  # fitted instance
-            Rm, Dm = pred.predict_matrix(tables, schemes, cfg.layout)
-            R = Rm
-            D = Dm * spans_gb[:, None]   # sec/GB -> sec for this partition
-
-    # ------------------------------------------------------------ assignment
-    cur = np.full(N, -1)
-    cost = cost_tensor(spans_gb, rho, cur, R, D, table, cfg.weights,
-                       months=cfg.months)
-    feas = latency_feasible(D, np.full(N, cfg.latency_sla_sec), table)
-    if cfg.tier_whitelist is not None:
-        allowed = np.zeros(table.num_tiers, bool)
-        allowed[list(cfg.tier_whitelist)] = True
-        feas &= allowed[None, :, None]
-    if not cfg.use_tiering:
-        fixed = cfg.fixed_tier if cfg.fixed_tier is not None else 0
-        only = np.zeros(table.num_tiers, bool)
-        only[fixed] = True
-        feas &= only[None, :, None]
-    if cfg.capacity_gb is None:
-        assign = greedy_assign(cost, feas)
-    else:
-        stored = spans_gb[:, None, None] / R[:, None, :] * np.ones(
-            (1, table.num_tiers, 1))
-        assign = capacitated_assign(cost, feas, stored, cfg.capacity_gb)
-
-    # --------------------------------------------------------------- billing
-    storage = read = decomp = 0.0
-    ttfb_acc = dlat_acc = rho_tot = 0.0
-    scheme_counts = [0] * table.num_tiers
-    for n in range(N):
-        l, k = int(assign.tier[n]), int(assign.scheme[n])
-        stored_gb = spans_gb[n] / R[n, k]
-        storage += stored_gb * table.storage_cents_gb_month[l] * cfg.months
-        read += rho[n] * stored_gb * table.read_cents_gb[l]
-        decomp += rho[n] * D[n, k] * table.compute_cents_sec
-        ttfb_acc += rho[n] * table.ttfb_seconds[l]
-        dlat_acc += rho[n] * D[n, k]
-        rho_tot += rho[n]
-        scheme_counts[l] += 1
-    return PipelineReport(
-        storage_cents=storage, decomp_cents=decomp, read_cents=read,
-        total_cents=storage + decomp + read,
-        read_latency_ttfb=ttfb_acc / max(rho_tot, 1e-12),
-        decomp_latency_ms=1e3 * dlat_acc / max(rho_tot, 1e-12),
-        tiering_scheme=scheme_counts, n_partitions=N, assignment=assign,
-        spans_gb=spans_gb, rho=rho, schemes=schemes)
+    """Legacy one-shot entry point: build + solve + bill via the engine."""
+    return PlacementEngine(table, cfg).run(parts, file_rows).report
 
 
 # ------------------------------------------------------- paper table variants

@@ -27,7 +27,11 @@ from typing import Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
+from repro.storage.codecs import available_schemes
 from repro.storage.store import TieredStore
+
+# Preferred shard codec, degrading to what this environment has installed.
+DEFAULT_SHARD_CODEC = available_schemes(("zstd-3", "zlib-1", "none"))[0]
 
 
 def stable_hash(key: str, salt: int = 0) -> int:
@@ -48,9 +52,10 @@ class LoaderStats:
 
 def write_token_shards(store: TieredStore, n_shards: int, rows: int,
                        seq: int, vocab: int, seed: int = 0,
-                       tier: int = 1, codec: str = "zstd-3",
+                       tier: int = 1, codec: Optional[str] = None,
                        prefix: str = "data") -> List[str]:
     """Synthetic Zipf-token corpus, sharded into the store."""
+    codec = codec or DEFAULT_SHARD_CODEC
     rng = np.random.default_rng(seed)
     ranks = np.arange(1, vocab + 1, dtype=np.float64)
     p = ranks ** -1.1

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import ctx
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh,
                    axis: str = "pod", microbatches: int = None):
@@ -71,7 +73,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x, *, mesh,
         return outs
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
-    out = jax.shard_map(
+    out = ctx.shard_map(
         per_device, mesh=mesh,
         in_specs=(spec_params, P()), out_specs=P(),
         check_vma=False,

@@ -13,9 +13,13 @@ import jax
 
 
 def _mk(shape, axes):
+    # jax.sharding.AxisType only exists on newer jax; older versions default
+    # every mesh axis to Auto anyway.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -56,7 +56,7 @@ def sharded_decode_attention(q, k, v, kv_len, *, window=None, softcap=None):
         o = jax.lax.psum(acc * w[..., None], "model")
         return (o / jnp.maximum(l_star, 1e-30)[..., None]).astype(q.dtype)
 
-    return jax.shard_map(
+    return ctx.shard_map(
         local, mesh=mesh,
         in_specs=(P(dps, None, None), P(dps, "model", None, None),
                   P(dps, "model", None, None), P(dps)),

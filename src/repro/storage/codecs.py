@@ -88,6 +88,21 @@ def codec_by_name(name: str) -> Codec:
     raise KeyError(name)
 
 
+# Scheme order follows the paper's evaluation set; index 0 must stay 'none'.
+DEFAULT_SCHEME_PREFERENCE = ("none", "zlib-1", "zstd-3", "zstd-19", "lzma-1")
+
+
+def available_schemes(
+        preferred: tuple = DEFAULT_SCHEME_PREFERENCE) -> tuple:
+    """``preferred`` filtered down to codecs importable in this environment.
+
+    Lets pipeline defaults degrade gracefully when optional compressors
+    (zstandard) are absent instead of raising ``KeyError`` at config time.
+    """
+    names = {c.name for c in default_codecs()}
+    return tuple(s for s in preferred if s in names)
+
+
 @dataclasses.dataclass
 class CodecMeasurement:
     ratio: float            # R = raw / compressed  (>= lower is worse)

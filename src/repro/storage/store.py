@@ -140,6 +140,53 @@ class TieredStore:
                     o.stored_gb * self.table.storage_cents_gb_month[o.tier]
                     * (min_stay - held))
 
+    # ------------------------------------------------------------ plan wiring
+    @staticmethod
+    def _plan_key(n: int) -> str:
+        return f"part-{n:06d}"
+
+    def apply_plan(self, plan, keys: Optional[list] = None) -> list:
+        """Materialize a ``PlacementPlan`` into the store.
+
+        Puts every partition's raw bytes at its assigned tier with its
+        assigned codec; returns the object keys (``part-NNNNNN`` unless
+        ``keys`` is given). Write costs are metered exactly like any put.
+        """
+        raws = plan.problem.raw_bytes
+        if raws is None:
+            raise ValueError("plan has no raw_bytes; build it with a "
+                             "PartitionStage-backed problem")
+        schemes = plan.problem.schemes
+        out = []
+        for n, raw in enumerate(raws):
+            key = keys[n] if keys is not None else self._plan_key(n)
+            self.put(key, raw, int(plan.assignment.tier[n]),
+                     schemes[int(plan.assignment.scheme[n])])
+            out.append(key)
+        return out
+
+    def migrate(self, migration, keys: Optional[list] = None) -> int:
+        """Apply a ``MigrationPlan`` produced by ``PlacementEngine.reoptimize``.
+
+        Tier-only moves go through :meth:`change_tier` (read-out + write-in +
+        early-deletion penalty). Scheme changes re-encode: get (read +
+        decompression compute), delete (penalty), put (write). Returns the
+        number of objects moved.
+        """
+        schemes = migration.plan.problem.schemes
+        moved_idx = [int(n) for n in range(len(migration.moved))
+                     if migration.moved[n]]
+        for n in moved_idx:
+            key = keys[n] if keys is not None else self._plan_key(n)
+            if migration.new_scheme[n] != migration.old_scheme[n]:
+                raw = self.get(key)
+                self.delete(key)
+                self.put(key, raw, int(migration.new_tier[n]),
+                         schemes[int(migration.new_scheme[n])])
+            else:
+                self.change_tier(key, int(migration.new_tier[n]))
+        return len(moved_idx)
+
     # ----------------------------------------------------------------- intro
     def tier_of(self, key: str) -> int:
         return self._objs[key].tier

@@ -24,6 +24,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import ctx
 from repro.kernels import ops
 
 _BLOCK = 256
@@ -74,7 +75,7 @@ def compressed_mean(grads, err, mesh, dp_axes: Tuple[str, ...]):
     # grads), so specs replicate leaves and psum does the reduction.
     in_specs = tuple(P() for _ in range(2 * len(flat_g)))
     out_specs = tuple(P() for _ in range(2 * len(flat_g)))
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+    fn = ctx.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     res = fn(*flat_g, *flat_e)
     new_g = jax.tree.unflatten(treedef, list(res[0::2]))

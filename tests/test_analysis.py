@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.analysis import hlo_stats
 from repro.core.costs import Weights, azure_table, cost_tensor, latency_feasible

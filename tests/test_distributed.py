@@ -22,7 +22,7 @@ def run_sub(code: str, devices: int = 8, timeout: int = 900) -> str:
     res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                          text=True, timeout=timeout,
                          env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root", "JAX_PLATFORMS": "cpu"})
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
     return res.stdout
 
@@ -121,11 +121,12 @@ def test_compressed_grad_mean():
     """Int8 error-feedback mean: quantization error carried, not lost."""
     out = run_sub("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import ctx
         from repro.launch.mesh import make_test_mesh
         from repro.training.grad_compression import compressed_mean
         mesh = make_test_mesh(data=4, model=2)
         g = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 256)) * 3.0}
-        with jax.set_mesh(mesh):
+        with ctx.mesh_context(mesh):
             red, err = compressed_mean(g, None, mesh, ("data",))
         # reduction of replicated grads is mean-preserving up to quant error
         q_err = float(jnp.abs(red["w"] - g["w"]).max())

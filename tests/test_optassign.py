@@ -2,12 +2,13 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.costs import (Weights, azure_table, cost_tensor,
                               latency_feasible, tpch_capacity_table)
 from repro.core.optassign import (brute_force, capacitated_assign,
-                                  greedy_assign, lock_schemes, matching_assign)
+                                  capacitated_assign_ref, greedy_assign,
+                                  lock_schemes, matching_assign)
 
 
 def _random_instance(rng, N=6, K=3):
@@ -83,20 +84,71 @@ def test_matching_vs_bruteforce_capacitated_equal_sizes():
             assert (used <= cap).all()
 
 
-def test_capacitated_close_to_bruteforce():
+def test_capacitated_ref_close_to_bruteforce():
     rng = np.random.default_rng(4)
     gaps = []
     for _ in range(6):
         cost, feas, spans, R, table = _random_instance(rng, N=5, K=2)
         stored = np.repeat((spans[:, None] / R)[:, None, :], table.num_tiers, 1)
         cap = np.array([spans.sum() / 3, spans.sum() / 2, spans.sum(), np.inf])
-        c = capacitated_assign(cost, feas, stored, cap)
+        c = capacitated_assign_ref(cost, feas, stored, cap)
         b = brute_force(cost, feas, stored, cap)
         if not b.feasible:
             continue
         assert c.feasible
         gaps.append(c.cost / b.cost - 1.0)
     assert gaps and max(gaps) < 0.02, f"capacitated gap too large: {gaps}"
+
+
+def test_capacitated_vectorized_matches_bruteforce():
+    """The jitted-Lagrangian + repair + 1-swap solver finds the optimum on
+    tiny instances (f64 rescoring makes this exact, not approximate)."""
+    rng = np.random.default_rng(4)
+    checked = 0
+    for _ in range(12):
+        cost, feas, spans, R, table = _random_instance(rng, N=5, K=2)
+        stored = np.repeat((spans[:, None] / R)[:, None, :], table.num_tiers, 1)
+        cap = np.array([spans.sum() / 3, spans.sum() / 2, spans.sum(), np.inf])
+        b = brute_force(cost, feas, stored, cap)
+        if not b.feasible:
+            continue
+        v = capacitated_assign(cost, feas, stored, cap)
+        assert v.feasible
+        assert v.cost == pytest.approx(b.cost, rel=1e-9)
+        used = np.zeros(table.num_tiers)
+        np.add.at(used, v.tier, stored[np.arange(len(v.tier)), v.tier, v.scheme])
+        assert (used <= cap + 1e-9).all()
+        checked += 1
+    assert checked >= 6
+
+
+def test_capacitated_vectorized_not_worse_than_ref():
+    rng = np.random.default_rng(5)
+    for _ in range(6):
+        cost, feas, spans, R, table = _random_instance(rng, N=8, K=3)
+        stored = np.repeat((spans[:, None] / R)[:, None, :], table.num_tiers, 1)
+        cap = np.array([spans.sum() / 4, spans.sum() / 3, spans.sum(), np.inf])
+        v = capacitated_assign(cost, feas, stored, cap)
+        r = capacitated_assign_ref(cost, feas, stored, cap)
+        if r.feasible:
+            assert v.feasible
+            assert v.cost <= r.cost * (1 + 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_capacitated_vectorized_optimality_property(seed):
+    """Hypothesis: vectorized == brute force on tiny capacitated instances."""
+    rng = np.random.default_rng(seed)
+    cost, feas, spans, R, table = _random_instance(rng, N=4, K=2)
+    stored = np.repeat((spans[:, None] / R)[:, None, :], table.num_tiers, 1)
+    cap = np.array([spans.sum() / 3, spans.sum() / 2, spans.sum(), np.inf])
+    b = brute_force(cost, feas, stored, cap)
+    if not b.feasible:
+        return
+    v = capacitated_assign(cost, feas, stored, cap)
+    assert v.feasible
+    assert v.cost == pytest.approx(b.cost, rel=1e-9)
 
 
 @settings(max_examples=25, deadline=None)

@@ -1,10 +1,14 @@
 """Paper Fig 7 — G-PART space/cost trade-off vs no-merge and merge-all,
-plus the ordered-partition DP (Thms 5/6) vs G-PART on time-series data."""
+plus the ordered-partition DP (Thms 5/6) vs G-PART on time-series data,
+plus the streaming sweep: amortized incremental ingest vs full rebuild."""
+
+import time
 
 import numpy as np
 
 from benchmarks.common import emit, row, timed
 from repro.core import datapart as dp
+from repro.core.stream import StreamingPartitioner
 from repro.data import tpch
 
 
@@ -60,7 +64,62 @@ def run():
                     space=round(approx.space, 3),
                     cost=round(approx.cost, 3),
                     cost_bound=round(2 * c_budget, 3)))
+
+    rows.extend(_streaming_sweep())
     return emit(rows, "fig7_gpart")
+
+
+# ------------------------------------------------------- streaming vs rebuild
+def _family_stream(rng, n_files, n_batches, per_batch):
+    """Contiguous-window query families over a shared file universe —
+    the time-ordered ingestion structure of §VI-B, batched by arrival."""
+    sizes = {f"s{i}": float(rng.uniform(0.5, 2.0)) for i in range(n_files)}
+    batches = []
+    for _ in range(n_batches):
+        b = []
+        for _ in range(per_batch):
+            w = int(rng.integers(2, 9))
+            lo = int(rng.integers(0, n_files - w))
+            b.append((tuple(f"s{j}" for j in range(lo, lo + w)),
+                      float(rng.uniform(0.5, 8.0))))
+        batches.append(b)
+    return sizes, batches
+
+
+def _streaming_sweep():
+    """Amortized per-batch incremental ingest (fold + threshold-gated
+    compaction) vs a full G-PART rebuild of the whole log — the acceptance
+    bar is >= 5x at N >= 2000 query families."""
+    out = []
+    rng = np.random.default_rng(11)
+    for n_batches, per_batch in ((10, 60), (20, 120)):
+        sizes, batches = _family_stream(rng, n_files=per_batch * 20,
+                                        n_batches=n_batches,
+                                        per_batch=per_batch)
+        concat = [qf for b in batches for qf in b]
+        n_fams = len(dp.make_partitions(concat, sizes))
+        sp = StreamingPartitioner(sizes, s_thresh=15.0, drift_threshold=0.5)
+        t0 = time.perf_counter()
+        for b in batches:
+            sp.ingest(b)
+            sp.compact()
+        stream_us = (time.perf_counter() - t0) * 1e6
+        amortized_us = stream_us / n_batches
+        # rebuild timing includes make_partitions: that's the full per-batch
+        # cost a non-streaming pipeline pays
+        ref, rebuild_us = timed(
+            lambda: dp.g_part(dp.make_partitions(concat, sizes),
+                              s_thresh=15.0), repeats=1)
+        out.append(row(
+            f"stream/N{n_fams}/ingest_amortized", amortized_us,
+            n_families=n_fams, n_batches=n_batches,
+            rebuild_us=round(rebuild_us, 1),
+            speedup_vs_rebuild=round(rebuild_us / amortized_us, 2),
+            compactions=sp.stats.n_compactions,
+            n_partitions=sp.n_partitions,
+            read_cost_ratio=round(dp.read_cost(sp.partitions)
+                                  / max(dp.read_cost(ref), 1e-12), 4)))
+    return out
 
 
 if __name__ == "__main__":

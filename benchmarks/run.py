@@ -16,6 +16,7 @@ MODULES = [
     ("fig7", "benchmarks.bench_gpart"),
     ("tablesIX-XI", "benchmarks.bench_scope_pipeline"),
     ("reopt", "benchmarks.bench_reoptimize"),
+    ("stream", "benchmarks.bench_stream"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

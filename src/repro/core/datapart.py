@@ -62,6 +62,11 @@ def overlap(a: Partition, b: Partition) -> float:
 
 
 def fractional_overlap(a: Partition, b: Partition) -> float:
+    # exact-zero for disjoint sets: summing spans in set-iteration order is
+    # PYTHONHASHSEED-dependent, and a +1e-16 residue here would let G-PART
+    # merge unrelated partitions (also a fast path — most pairs are disjoint)
+    if not (a.files & b.files):
+        return 0.0
     u = a.sizes.span(a.files | b.files)
     return (a.span + b.span - u) / max(u, 1e-12)
 

@@ -23,11 +23,13 @@ wrapper over this engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, FrozenSet, List, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from repro.core import datapart
+from repro.core.stream import QueryFamilies, StreamingPartitioner
 from repro.core.costs import (CostTable, Weights, cost_tensor,
                               early_delete_penalty_gb, latency_feasible)
 from repro.core.optassign import (Assignment, capacitated_assign,
@@ -352,21 +354,37 @@ class PlacementEngine:
         is never re-compressed.
         """
         prob = plan.problem
-        table = self.table
         new_rho = np.asarray(new_rho, np.float64)
         cur_l = plan.assignment.tier.astype(int)
         cur_k = plan.assignment.scheme.astype(int)
-        N, L = prob.n, table.num_tiers
-        K = len(prob.schemes)
-
         problem2 = dataclasses.replace(prob, rho=new_rho, current_tier=cur_l)
+        return self._solve_migration(problem2, cur_l, cur_k, plan.stored_gb,
+                                     months_held, lock_unchanged,
+                                     rho_rel_tol, prob.rho)
 
-        drifted = (np.abs(new_rho - prob.rho)
-                   > rho_rel_tol * np.maximum(prob.rho, 1e-12))
-        locked = np.where(drifted, -1, cur_k) if lock_unchanged else None
+    def _solve_migration(self, problem2: PlacementProblem,
+                         cur_l: np.ndarray, cur_k: np.ndarray,
+                         old_stored: np.ndarray,
+                         months_held: "float | np.ndarray",
+                         lock_unchanged: bool, rho_rel_tol: float,
+                         rho_ref: np.ndarray) -> MigrationPlan:
+        """Shared migration core for :meth:`reoptimize` and the streaming
+        engine. ``cur_l``/``cur_k`` may contain -1 for partitions that are
+        new to the placement (no penalty, no transfer — pure ingestion via
+        the cost tensor's Delta_{-1,l} row); ``rho_ref`` is the access rate
+        each partition's current scheme was chosen under (drift-lock base).
+        """
+        table = self.table
+        L = table.num_tiers
+        K = len(problem2.schemes)
 
-        old_stored = plan.stored_gb                       # (N,)
-        new_stored_nk = prob.spans_gb[:, None] / prob.R   # (N,K)
+        drifted = (np.abs(problem2.rho - rho_ref)
+                   > rho_rel_tol * np.maximum(rho_ref, 1e-12))
+        locked = None
+        if lock_unchanged:
+            locked = np.where(~drifted & (cur_k >= 0), cur_k, -1)
+
+        new_stored_nk = problem2.spans_gb[:, None] / problem2.R   # (N,K)
         is_cur_cell = ((np.arange(L)[None, :, None] == cur_l[:, None, None])
                        & (np.arange(K)[None, None, :] == cur_k[:, None, None]))
 
@@ -379,9 +397,10 @@ class PlacementEngine:
 
         # Same-tier scheme change: Delta_{u,u} = 0 in the cost tensor, but a
         # re-put still pays read-out of the old payload + write-in of the new.
+        safe_l = np.maximum(cur_l, 0)         # -1 rows are masked out below
         same_tier_new_scheme = ((np.arange(L)[None, :, None]
                                  == cur_l[:, None, None]) & ~is_cur_cell)
-        recompress = (old_stored * table.read_cents_gb[cur_l])[:, None, None] \
+        recompress = (old_stored * table.read_cents_gb[safe_l])[:, None, None] \
             + new_stored_nk[:, None, :] * table.write_cents_gb[None, :, None]
         extra = extra + self.cfg.weights.gamma * np.where(
             same_tier_new_scheme, recompress, 0.0)
@@ -393,17 +412,210 @@ class PlacementEngine:
 
         new_l = assignment.tier.astype(int)
         new_k = assignment.scheme.astype(int)
-        moved = (new_l != cur_l) | (new_k != cur_k)
+        moved = (cur_l >= 0) & ((new_l != cur_l) | (new_k != cur_k))
         new_stored = new_plan.stored_gb
         # Transfer: read the old payload out of its tier; write the (possibly
         # re-compressed) payload into the destination tier.
         write_gb = np.where(new_k == cur_k, old_stored, new_stored)
         migration = float(np.where(
             moved,
-            old_stored * table.read_cents_gb[cur_l]
+            old_stored * table.read_cents_gb[safe_l]
             + write_gb * table.write_cents_gb[new_l], 0.0).sum())
         penalty = float(np.where(moved, penalty_cents_n, 0.0).sum())
         return MigrationPlan(
             plan=new_plan, moved=moved, old_tier=cur_l, new_tier=new_l,
             old_scheme=cur_k, new_scheme=new_k,
             migration_cents=migration, penalty_cents=penalty)
+
+
+# --------------------------------------------------------------- streaming
+@dataclasses.dataclass
+class StreamStepReport:
+    """Per-batch summary of an ``ingest_and_reoptimize`` step."""
+
+    batch: int
+    n_partitions: int
+    n_new: int                        # partitions entering as new data
+    n_moved: int                      # surviving partitions that migrated
+    compacted: bool
+    migration_cents: float
+    penalty_cents: float
+    steady_cents: float               # steady-state bill of the new plan
+
+
+@dataclasses.dataclass
+class _HeldState:
+    """Placement state carried across batches for one partition file set."""
+
+    tier: int
+    scheme: int
+    stored_gb: float
+    rho_ref: float                    # rho the current scheme was chosen under
+    months_held: float                # since last move (minimum-stay clock)
+
+
+class StreamingEngine:
+    """Rolling-window placement: ingest access-log batches, migrate deltas.
+
+    Couples a :class:`~repro.core.stream.StreamingPartitioner` (incremental
+    G-PART) with :class:`PlacementEngine`'s migration solver.  Placement
+    state is carried across batches by partition **file-set identity**:
+    partitions that survive a fold unchanged keep their current tier and
+    minimum-stay clock, so the optimizer internalizes the full cost of
+    moving them (tier-change transfer, re-compression, early-deletion
+    penalties); merged or newly seen partitions enter as new data
+    (``current_tier = -1`` — pure ingestion write cost).
+
+    ``rd_fn(partitions, schemes) -> (R, D)`` optionally supplies
+    compression ratio / decompression-time matrices (e.g. a fitted
+    COMPREDICT model); without it the stream is placed uncompressed, which
+    is the right default when only access-log metadata is available.
+    """
+
+    def __init__(self, table: CostTable, cfg: ScopeConfig,
+                 sizes: "datapart.FileSizes | Dict[str, float]", *,
+                 s_thresh: Optional[float] = None,
+                 decay: float = 1.0, window: Optional[int] = None,
+                 drift_threshold: float = 0.5, rho_rel_tol: float = 0.25,
+                 rd_fn: Optional[Callable[[List[datapart.Partition],
+                                           Sequence[str]],
+                                          Tuple[np.ndarray, np.ndarray]]]
+                 = None):
+        self.table = table
+        self.cfg = cfg
+        self.engine = PlacementEngine(table, cfg)
+        self.sizes = (sizes if isinstance(sizes, datapart.FileSizes)
+                      else datapart.FileSizes(sizes))
+        self._s_thresh = s_thresh
+        self._decay = decay
+        self._window = window
+        self._drift_threshold = drift_threshold
+        self.rho_rel_tol = rho_rel_tol
+        self.rd_fn = rd_fn
+        self.partitioner: Optional[StreamingPartitioner] = None
+        self.plan: Optional[PlacementPlan] = None
+        self.history: List[StreamStepReport] = []
+        # file set -> held states, a LIST because two live partitions can
+        # share a file set (a family can coexist with a merge producing the
+        # same union); matched positionally in plan order
+        self._held: Dict[FrozenSet[str], List[_HeldState]] = {}
+
+    # ----------------------------------------------------------- internals
+    def _ensure_partitioner(self, batch: QueryFamilies,
+                            ) -> Optional[StreamingPartitioner]:
+        if self.partitioner is None:
+            s = self._s_thresh
+            if s is None:
+                spans = [self.sizes.span(frozenset(f)) for f, _ in batch if f]
+                if not spans:
+                    # no evidence to size the span cap yet — defer creation
+                    # so an empty first batch can't freeze s_thresh at a
+                    # value that never seals a merge product
+                    return None
+                s = self.cfg.s_thresh_mult * float(np.median(spans))
+            self.partitioner = StreamingPartitioner(
+                self.sizes, s_thresh=s, rho_c=self.cfg.rho_c,
+                rho_c_abs=self.cfg.rho_c_abs, decay=self._decay,
+                window=self._window,
+                drift_threshold=self._drift_threshold)
+        return self.partitioner
+
+    def _build_problem(self, parts: List[datapart.Partition],
+                       cur_l: np.ndarray) -> PlacementProblem:
+        N = len(parts)
+        spans_gb = np.array([p.span for p in parts], np.float64)
+        rho = np.array([p.rho for p in parts], np.float64)
+        if self.rd_fn is not None and self.cfg.use_compression:
+            schemes = list(self.cfg.schemes)
+            R, D = self.rd_fn(parts, schemes)
+        else:
+            schemes = ["none"]
+            R = np.ones((N, 1))
+            D = np.zeros((N, 1))
+        return PlacementProblem(
+            spans_gb=spans_gb, rho=rho, current_tier=cur_l, R=R, D=D,
+            schemes=schemes, table=self.table, cfg=self.cfg,
+            partitions=list(parts), raw_bytes=None)
+
+    def _empty_migration(self) -> MigrationPlan:
+        z = np.zeros(0, int)
+        problem = self._build_problem([], z)
+        assignment = Assignment(tier=z.copy(), scheme=z.copy(),
+                                cost=0.0, feasible=True)
+        report = self.engine.billing(problem, assignment)
+        plan = PlacementPlan(problem, assignment, report)
+        return MigrationPlan(
+            plan=plan, moved=np.zeros(0, bool), old_tier=z.copy(),
+            new_tier=z.copy(), old_scheme=z.copy(), new_scheme=z.copy(),
+            migration_cents=0.0, penalty_cents=0.0)
+
+    # ---------------------------------------------------------------- steps
+    def ingest_and_reoptimize(self, query_files: QueryFamilies,
+                              months: float = 1.0) -> MigrationPlan:
+        """Fold one access-log batch in, compact if drifted, re-optimize.
+
+        ``months`` is the logical time elapsed since the previous batch; it
+        ages every held partition's minimum-stay clock before early-deletion
+        penalties are priced. Returns the :class:`MigrationPlan` (``moved``
+        covers surviving partitions only; new ones appear in the plan with
+        ingestion write cost already internalized by the cost tensor).
+        """
+        sp = self._ensure_partitioner(query_files)
+        compacted = False
+        if sp is not None:
+            sp.ingest(query_files)
+            compacted = sp.compact()
+        parts = sp.partitions if sp is not None else []
+        N = len(parts)
+        if N == 0:
+            # empty stream state (empty batches, or the whole window
+            # expired): a no-op step — the solvers don't accept N=0
+            mig = self._empty_migration()
+            self.plan = mig.plan
+            self.history.append(StreamStepReport(
+                batch=len(self.history), n_partitions=0, n_new=0, n_moved=0,
+                compacted=compacted, migration_cents=0.0, penalty_cents=0.0,
+                steady_cents=0.0))
+            return mig
+        cur_l = np.full(N, -1, int)
+        cur_k = np.full(N, -1, int)
+        old_stored = np.zeros(N)
+        held_months = np.zeros(N)
+        rho_ref = np.array([p.rho for p in parts], np.float64)
+        for i, p in enumerate(parts):
+            states = self._held.get(p.files)
+            if states:
+                st = states.pop(0)
+                cur_l[i], cur_k[i] = st.tier, st.scheme
+                old_stored[i] = st.stored_gb
+                rho_ref[i] = st.rho_ref
+                held_months[i] = st.months_held + months
+
+        problem = self._build_problem(parts, cur_l)
+        mig = self.engine._solve_migration(
+            problem, cur_l, cur_k, old_stored, held_months,
+            lock_unchanged=True, rho_rel_tol=self.rho_rel_tol,
+            rho_ref=rho_ref)
+
+        drifted = (np.abs(problem.rho - rho_ref)
+                   > self.rho_rel_tol * np.maximum(rho_ref, 1e-12))
+        new_stored = mig.plan.stored_gb
+        self._held = {}
+        for i, p in enumerate(parts):
+            surviving = cur_l[i] >= 0 and not mig.moved[i]
+            self._held.setdefault(p.files, []).append(_HeldState(
+                tier=int(mig.new_tier[i]), scheme=int(mig.new_scheme[i]),
+                stored_gb=float(new_stored[i]),
+                # the scheme was (re-)decided now unless the partition was
+                # locked: keep the lock base so slow drift still accumulates
+                rho_ref=(float(rho_ref[i]) if surviving and not drifted[i]
+                         else float(problem.rho[i])),
+                months_held=float(held_months[i]) if surviving else 0.0))
+        self.plan = mig.plan
+        self.history.append(StreamStepReport(
+            batch=len(self.history), n_partitions=N,
+            n_new=int((cur_l < 0).sum()), n_moved=mig.n_moved,
+            compacted=compacted, migration_cents=mig.migration_cents,
+            penalty_cents=mig.penalty_cents,
+            steady_cents=mig.plan.report.total_cents))
+        return mig

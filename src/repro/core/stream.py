@@ -1,0 +1,286 @@
+"""Streaming G-PART — incremental access-log ingestion (paper §VI, online).
+
+DATAPART's G-PART (Algorithm 1) partitions from a *static* access log, but
+the paper's premise — temporal access predictions feeding the optimizer —
+implies logs arrive continuously. :class:`StreamingPartitioner` maintains the
+G-PART partition state across :meth:`~StreamingPartitioner.ingest` calls,
+LSM-tree style: new query families are *folded* into the existing partitions
+with the same fractional-overlap max-heap merge rule, and a family-level log
+(the "memtable of evidence") is kept alongside so :meth:`compact` can run a
+full re-merge when accumulated drift exceeds a threshold.
+
+Correctness contract (pinned down by ``tests/test_stream.py``):
+
+* total rho is conserved exactly by folding (merges sum rho, repeated
+  families accumulate into their owning partition);
+* with no decay, no window, and compaction after every batch, the streaming
+  state is **exactly** batch ``g_part`` on the concatenated log — compaction
+  replays Algorithm 1 over the family log with identical heap tie-breaking;
+* between compactions the objective (``datapart.read_cost``) tracks the
+  batch answer within a drift-bounded tolerance.
+
+Rolling-window semantics: ``decay`` exponentially ages all accumulated rho
+once per ingest; ``window=W`` additionally retires the contribution of
+batches older than ``W`` ingests (delta-subtraction, view-maintenance
+style). Both leave partition *structure* untouched until the next compact.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+from typing import (Deque, Dict, FrozenSet, List, Optional, Sequence, Tuple,
+                    Union)
+
+from repro.core.datapart import (FileSizes, Partition, feasible_pair,
+                                 fractional_overlap)
+
+QueryFamilies = Sequence[Tuple[Tuple[str, ...], float]]
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Counters for the ingest/compact lifecycle (benchmarks report these)."""
+
+    n_batches: int = 0
+    n_families_ingested: int = 0
+    n_fold_merges: int = 0
+    n_compactions: int = 0
+    n_compact_merges: int = 0
+
+
+class StreamingPartitioner:
+    """Incremental G-PART over an unbounded stream of query families.
+
+    Parameters mirror :func:`repro.core.datapart.g_part` (``s_thresh``,
+    ``rho_c``, ``rho_c_abs``); ``decay``/``window`` define the rolling
+    window, ``drift_threshold`` gates automatic compaction: ``compact()``
+    re-merges once the rho mass ingested (or retired) since the last
+    compaction exceeds that fraction of the total.
+    """
+
+    def __init__(self, sizes: Union[FileSizes, Dict[str, float]],
+                 s_thresh: float, rho_c: float = 4.0,
+                 rho_c_abs: float = 10.0, decay: float = 1.0,
+                 window: Optional[int] = None,
+                 drift_threshold: float = 0.5):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        if window is not None and window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.sizes = sizes if isinstance(sizes, FileSizes) else FileSizes(sizes)
+        self.s_thresh = float(s_thresh)
+        self.rho_c = float(rho_c)
+        self.rho_c_abs = float(rho_c_abs)
+        self.decay = float(decay)
+        self.window = window
+        self.drift_threshold = float(drift_threshold)
+        self.stats = StreamStats()
+        # family log: insertion-ordered, so compaction replays the
+        # concatenated stream exactly like datapart.make_partitions would
+        self._families: Dict[FrozenSet[str], float] = {}
+        self._live: Dict[int, Partition] = {}
+        self._owner: Dict[FrozenSet[str], int] = {}     # family -> live id
+        self._owned: Dict[int, List[FrozenSet[str]]] = {}  # live id -> families
+        self._next_id = 0
+        # merge products at/over the span cap: Algorithm 1 never pushes new
+        # edges from them, and no later-arriving node may link to them either
+        # (in batch, a family node only ever has edges to its coevals) — the
+        # seal is what keeps incremental folds from growing giants unboundedly
+        self._sealed: set = set()
+        self._history: Deque[Dict[FrozenSet[str], float]] = collections.deque()
+        self._rho_drift = 0.0            # rho ingested/retired since compact
+
+    # ------------------------------------------------------------- inspection
+    @property
+    def partitions(self) -> List[Partition]:
+        return list(self._live.values())
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self._live)
+
+    @property
+    def n_families(self) -> int:
+        return len(self._families)
+
+    def total_rho(self) -> float:
+        return float(sum(p.rho for p in self._live.values()))
+
+    def drift(self) -> float:
+        """Fraction of the current rho mass that arrived (or was retired)
+        since the last compaction — the compaction trigger metric."""
+        return self._rho_drift / max(self.total_rho(), 1e-12)
+
+    # --------------------------------------------------------------- ingest
+    def ingest(self, query_files: QueryFamilies) -> List[Partition]:
+        """Fold one access-log batch into the partition state.
+
+        Families seen before route their rho straight to the partition that
+        owns them (delta propagation); genuinely new families enter as fresh
+        nodes and are greedily merged against the live set with the same
+        heap rule as Algorithm 1. Returns the current partitions.
+        """
+        self.stats.n_batches += 1
+        if self.decay != 1.0:
+            self._apply_decay()
+        if self.window is not None:
+            self._retire_expired()
+
+        batch: Dict[FrozenSet[str], float] = {}
+        touched: List[int] = []
+        new_ids: List[int] = []
+        for files, rho in query_files:
+            key = frozenset(files)
+            if not key:
+                continue
+            self.stats.n_families_ingested += 1
+            rho = float(rho)
+            self._families[key] = self._families.get(key, 0.0) + rho
+            batch[key] = batch.get(key, 0.0) + rho
+            self._rho_drift += rho
+            owner = self._owner.get(key)
+            if owner is not None:
+                p = self._live[owner]
+                self._live[owner] = Partition(p.files, p.rho + rho, p.sizes)
+                touched.append(owner)
+            else:
+                nid = self._next_id
+                self._next_id += 1
+                self._live[nid] = Partition(key, rho, self.sizes)
+                self._owner[key] = nid
+                self._owned[nid] = [key]
+                new_ids.append(nid)
+        if self.window is not None:
+            self._history.append(batch)
+        if touched or new_ids:
+            seeds = sorted(set(touched) | set(new_ids))
+            self.stats.n_fold_merges += self._merge(self._seed_edges(seeds))
+        return self.partitions
+
+    def _apply_decay(self) -> None:
+        d = self.decay
+        for key in self._families:
+            self._families[key] *= d
+        for i, p in self._live.items():
+            self._live[i] = Partition(p.files, p.rho * d, p.sizes)
+        for hist in self._history:
+            for key in hist:
+                hist[key] *= d
+        self._rho_drift *= d
+
+    def _retire_expired(self) -> None:
+        """Subtract the contribution of batches older than the window."""
+        while len(self._history) >= self.window:
+            expired = self._history.popleft()
+            for key, rho in expired.items():
+                held = self._families.get(key, 0.0)
+                take = min(rho, held)          # guard fp drift on re-decayed rho
+                if held - take <= 1e-12:
+                    take = held
+                    self._families.pop(key, None)
+                else:
+                    self._families[key] = held - take
+                owner = self._owner.get(key)
+                if owner is not None:
+                    p = self._live[owner]
+                    self._live[owner] = Partition(
+                        p.files, max(p.rho - take, 0.0), p.sizes)
+                self._rho_drift += take
+
+    # ---------------------------------------------------------- merge machinery
+    def _seed_edges(self, seeds: Sequence[int]) -> List[Tuple[float, int, int]]:
+        """Heap edges from each seed node to every live partner (the bounded
+        local neighbourhood a fold has to consider)."""
+        heap: List[Tuple[float, int, int]] = []
+        seed_set = set(seeds)
+        for i in seeds:
+            if i in self._sealed:
+                continue
+            pi = self._live[i]
+            for j, pj in self._live.items():
+                if j == i or (j in seed_set and j < i) or j in self._sealed:
+                    continue  # both-seed pairs pushed once (from the smaller id)
+                if not feasible_pair(pi, pj, self.rho_c, self.rho_c_abs):
+                    continue
+                w = fractional_overlap(pi, pj)
+                if w > 0.0:
+                    heapq.heappush(heap, (-w, min(i, j), max(i, j)))
+        return heap
+
+    def _all_edges(self) -> List[Tuple[float, int, int]]:
+        """All-pairs edges in Algorithm 1's exact construction order."""
+        heap: List[Tuple[float, int, int]] = []
+        ids = list(self._live)
+        for a_i in range(len(ids)):
+            pi = self._live[ids[a_i]]
+            for b_i in range(a_i + 1, len(ids)):
+                pj = self._live[ids[b_i]]
+                if feasible_pair(pi, pj, self.rho_c, self.rho_c_abs):
+                    w = fractional_overlap(pi, pj)
+                    if w > 0.0:
+                        heapq.heappush(heap, (-w, ids[a_i], ids[b_i]))
+        return heap
+
+    def _merge(self, heap: List[Tuple[float, int, int]]) -> int:
+        """Lazy-deletion heap merge loop — operationally identical to
+        ``datapart.g_part`` so compaction reproduces it bit-for-bit."""
+        n_merges = 0
+        dead: set = set()
+        while heap:
+            _, i, j = heapq.heappop(heap)
+            if i in dead or j in dead:
+                continue
+            a, b = self._live[i], self._live[j]
+            if not feasible_pair(a, b, self.rho_c, self.rho_c_abs):
+                continue
+            merged = Partition(a.files | b.files, a.rho + b.rho, a.sizes)
+            dead.update((i, j))
+            del self._live[i], self._live[j]
+            mid = self._next_id
+            self._next_id += 1
+            self._live[mid] = merged
+            fams = self._owned.pop(i, []) + self._owned.pop(j, [])
+            self._owned[mid] = fams
+            for key in fams:
+                self._owner[key] = mid
+            n_merges += 1
+            if merged.span >= self.s_thresh:
+                self._sealed.add(mid)
+            else:
+                pm = merged
+                for k, pk in self._live.items():
+                    if k == mid:
+                        continue
+                    if not feasible_pair(pm, pk, self.rho_c, self.rho_c_abs):
+                        continue
+                    w = fractional_overlap(pm, pk)
+                    if w > 0.0:
+                        heapq.heappush(heap, (-w, min(mid, k), max(mid, k)))
+        return n_merges
+
+    # --------------------------------------------------------------- compact
+    def compact(self, force: bool = False) -> bool:
+        """Full re-merge from the family log when drift warrants it.
+
+        Rebuilds one node per accumulated family (in first-seen order) and
+        replays Algorithm 1's heap construction exactly, which is what makes
+        the compacted state equal batch ``g_part`` on the concatenated
+        (decayed / windowed) log. Returns True if a compaction ran.
+        """
+        if not force and self.drift() <= self.drift_threshold:
+            return False
+        self._live = {}
+        self._owner = {}
+        self._owned = {}
+        self._sealed = set()
+        for i, (key, rho) in enumerate(self._families.items()):
+            self._live[i] = Partition(key, rho, self.sizes)
+            self._owner[key] = i
+            self._owned[i] = [key]
+        self._next_id = len(self._families)
+        self.stats.n_compact_merges += self._merge(self._all_edges())
+        self.stats.n_compactions += 1
+        self._rho_drift = 0.0
+        return True

@@ -16,7 +16,7 @@ Popularity across datasets is Zipf-like (Fig 1a: few datasets dominate).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -49,11 +49,17 @@ class Workload:
 def generate_workload(n_datasets: int = 200, n_months: int = 24,
                       seed: int = 0,
                       size_lognorm=(4.0, 2.0),
-                      pattern_probs: Optional[Dict[str, float]] = None
+                      pattern_probs: Optional[Dict[str, float]] = None,
+                      rng: Optional[np.random.Generator] = None
                       ) -> Workload:
     """``size_lognorm``=(mu, sigma) of ln(size in GB): defaults span
-    ~1 GB .. ~1 PB with a heavy right tail, matching Enterprise Data I."""
-    rng = np.random.default_rng(seed)
+    ~1 GB .. ~1 PB with a heavy right tail, matching Enterprise Data I.
+
+    All randomness flows through ``rng`` (an explicit
+    ``np.random.Generator``); ``seed`` only applies when ``rng`` is None,
+    so callers sharing one generator get reproducible composed streams.
+    """
+    rng = np.random.default_rng(seed) if rng is None else rng
     probs = pattern_probs or {"decreasing": 0.3, "constant": 0.15,
                               "periodic": 0.15, "spike": 0.1, "cold": 0.3}
     names = list(probs)
@@ -115,3 +121,66 @@ def feature_matrix(w: Workload, at_month: int, history: int = 4) -> np.ndarray:
         rows.append(np.concatenate([[np.log1p(d.size_gb), d.age_at(at_month)],
                                     reads, writes]))
     return np.stack(rows)
+
+
+# ---------------------------------------------------- streaming access logs
+QueryFamilies = List[Tuple[Tuple[str, ...], float]]
+
+
+def n_files_of(d: DatasetTrace, max_files: int = 12,
+               file_gb: float = 256.0) -> int:
+    """Datasets are stored as contiguous 'files' of ~``file_gb`` each,
+    capped at ``max_files`` — the unit DATAPART partitions over."""
+    return int(np.clip(np.ceil(d.size_gb / file_gb), 1, max_files))
+
+
+def dataset_file_sizes(w: Workload, max_files: int = 12,
+                       file_gb: float = 256.0) -> Dict[str, float]:
+    """file_id -> size in GB for every dataset in the workload."""
+    sizes: Dict[str, float] = {}
+    for d in w.datasets:
+        n = n_files_of(d, max_files, file_gb)
+        for j in range(n):
+            sizes[f"{d.name}/{j:03d}"] = d.size_gb / n
+    return sizes
+
+
+def monthly_query_log(w: Workload, month: int, rng: np.random.Generator,
+                      queries_per_active: int = 3, max_files: int = 12,
+                      file_gb: float = 256.0) -> QueryFamilies:
+    """One month's access log as (files-touched, rho) query families.
+
+    Each dataset active in ``month`` splits its read volume across one
+    full-dataset scan plus ``queries_per_active - 1`` contiguous file-range
+    scans (data lakes ingest time-ordered events, so range predicates touch
+    contiguous file runs — same structure as the TPC-H chunking).
+
+    ``rng`` is required: all emitter randomness flows through the caller's
+    generator so streaming tests and benchmarks are reproducible.
+    """
+    out: QueryFamilies = []
+    for d in w.datasets:
+        reads = float(d.reads[month]) if month < len(d.reads) else 0.0
+        if reads <= 0.0:
+            continue
+        n = n_files_of(d, max_files, file_gb)
+        files = [f"{d.name}/{j:03d}" for j in range(n)]
+        q = max(int(queries_per_active), 1)
+        shares = rng.dirichlet(np.ones(q)) * reads
+        out.append((tuple(files), float(shares[0])))          # full scan
+        for s in shares[1:]:
+            lo = int(rng.integers(0, n))
+            hi = lo + int(rng.integers(1, n - lo + 1))
+            out.append((tuple(files[lo:hi]), float(s)))
+    return out
+
+
+def stream_query_log(w: Workload, rng: np.random.Generator,
+                     months: Optional[int] = None,
+                     queries_per_active: int = 3, max_files: int = 12,
+                     file_gb: float = 256.0) -> Iterator[QueryFamilies]:
+    """Month-by-month access-log emitter driving ``StreamingEngine``:
+    yields one ``monthly_query_log`` batch per month of the trace."""
+    for m in range(months if months is not None else w.n_months):
+        yield monthly_query_log(w, m, rng, queries_per_active, max_files,
+                                file_gb)

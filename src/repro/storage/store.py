@@ -11,9 +11,10 @@ data loader; it is also what the SCOPe pipeline optimizes.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
 import time
-from typing import Dict, Optional
+from typing import Dict, Iterable, Optional
 
 from repro.core.costs import CostTable, azure_table
 from repro.storage.codecs import Codec, codec_by_name
@@ -186,6 +187,75 @@ class TieredStore:
             else:
                 self.change_tier(key, int(migration.new_tier[n]))
         return len(moved_idx)
+
+    # -------------------------------------------------------- streaming sync
+    @staticmethod
+    def partition_key(files: Iterable[str]) -> str:
+        """Stable object key for a partition, derived from its file set —
+        the identity the streaming engine carries across re-partitionings.
+        Distinct from ``apply_plan``'s positional ``part-NNNNNN`` keys."""
+        h = hashlib.sha1("\x00".join(sorted(files)).encode()).hexdigest()[:16]
+        return f"gpart-{h}"
+
+    @classmethod
+    def plan_keys(cls, plan) -> list:
+        """Object key per plan partition. Two live partitions can share a
+        file set (a query family can coexist with a merge producing the same
+        union when access-comparability blocks folding them), so duplicates
+        get an occurrence-index suffix in plan order."""
+        keys = []
+        seen: Dict[str, int] = {}
+        for p in plan.problem.partitions:
+            base = cls.partition_key(p.files)
+            c = seen.get(base, 0)
+            seen[base] = c + 1
+            keys.append(base if c == 0 else f"{base}#{c}")
+        return keys
+
+    def sync_plan(self, plan, payloads: Optional[list] = None) -> Dict[str, int]:
+        """Reconcile store contents with a (streaming) ``PlacementPlan``.
+
+        Partitions are keyed by :meth:`partition_key`, so this composes with
+        ``StreamingEngine``: partitions new to the store are put at their
+        assigned tier/codec, survivors are tier-changed or re-encoded as the
+        plan demands, and ``gpart-*`` objects whose file set no longer exists
+        (merged away by a fold/compaction, or expired from the rolling
+        window) are deleted — every step metered exactly like the manual
+        ops. Returns op counts ``{"put", "moved", "reencoded", "deleted"}``.
+        """
+        parts = plan.problem.partitions
+        if parts is None:
+            raise ValueError("plan has no partitions; sync_plan needs the "
+                             "partition file sets to key objects")
+        if payloads is None:
+            payloads = plan.problem.raw_bytes
+        schemes = plan.problem.schemes
+        stats = {"put": 0, "moved": 0, "reencoded": 0, "deleted": 0}
+        keys = self.plan_keys(plan)
+        desired = set(keys)
+        for n, (p, key) in enumerate(zip(parts, keys)):
+            tier = int(plan.assignment.tier[n])
+            codec = schemes[int(plan.assignment.scheme[n])]
+            o = self._objs.get(key)
+            if o is None:
+                if payloads is None:
+                    raise ValueError("new partitions need payloads (pass "
+                                     "payloads= or build with raw_bytes)")
+                self.put(key, payloads[n], tier, codec)
+                stats["put"] += 1
+            elif o.codec != codec:
+                raw = self.get(key)
+                self.delete(key)
+                self.put(key, raw, tier, codec)
+                stats["reencoded"] += 1
+            elif o.tier != tier:
+                self.change_tier(key, tier)
+                stats["moved"] += 1
+        for key in [k for k in self._objs
+                    if k.startswith("gpart-") and k not in desired]:
+            self.delete(key)
+            stats["deleted"] += 1
+        return stats
 
     # ----------------------------------------------------------------- intro
     def tier_of(self, key: str) -> int:

@@ -193,6 +193,39 @@ def test_reoptimize_early_delete_penalty_charged():
     assert mig.penalty_cents >= expect - 1e-15
 
 
+def test_reoptimize_no_drift_is_idempotent():
+    """Hysteresis: a no-drift stream of reoptimize calls never migrates —
+    the cost tensor internalizes transfer from current_tier, so staying put
+    is optimal, and repeated calls are stable fixed points."""
+    eng, plan = _synthetic_plan()
+    cur = plan
+    for months in (0.25, 1.0, 3.0):
+        mig = eng.reoptimize(cur, cur.problem.rho.copy(), months_held=months)
+        assert mig.n_moved == 0
+        assert mig.migration_cents == 0.0 and mig.penalty_cents == 0.0
+        assert np.array_equal(mig.new_tier, mig.old_tier)
+        assert np.array_equal(mig.new_scheme, mig.old_scheme)
+        cur = mig.plan
+
+
+def test_reoptimize_charges_each_tier_change_at_most_once():
+    """A drift step pays its migration once; re-running reoptimize at the
+    already-migrated state with the same rates charges nothing further."""
+    eng, plan = _synthetic_plan()
+    new_rho = plan.problem.rho.copy()
+    new_rho[0] *= 5000.0
+    new_rho[4] /= 5000.0
+    mig1 = eng.reoptimize(plan, new_rho, months_held=0.2)
+    assert mig1.n_moved >= 1 and mig1.migration_cents > 0.0
+    total_paid = mig1.total_move_cents
+    for _ in range(2):
+        mig = eng.reoptimize(mig1.plan, new_rho, months_held=0.5)
+        assert mig.n_moved == 0
+        assert mig.total_move_cents == 0.0
+        total_paid += mig.total_move_cents
+    assert total_paid == pytest.approx(mig1.total_move_cents)
+
+
 def test_billing_stage_matches_legacy_loop_random_assignments():
     eng, plan = _synthetic_plan()
     problem = plan.problem

@@ -172,6 +172,49 @@ def test_entropy_matches_numpy_oracle():
     assert abs(float(ent) - ent_np) < 1e-4
 
 
+def _entropy_numpy(data: np.ndarray):
+    """Histogram/entropy golden reference (bits per byte)."""
+    hist = np.bincount(data, minlength=256)
+    p = hist / max(len(data), 1)
+    nz = p[p > 0]
+    return hist, float(-(nz * np.log2(nz)).sum())
+
+
+@pytest.mark.parametrize("n,block", [
+    (4096, 1024),     # n % block == 0: empty-pad block boundary
+    (4097, 1024),     # one byte spills into a heavily padded final block
+    (5000, 1024),     # n not divisible by block
+    (100, 1024),      # n < block: block clamps to n, no pad
+    (1, 64),          # single byte
+])
+def test_entropy_golden_vs_numpy(n, block):
+    """interpret=True kernel vs the NumPy histogram/entropy reference; pad
+    bytes (zeros) must never leak into the histogram."""
+    data = np.random.default_rng(n).integers(1, 256, n).astype(np.uint8)
+    hist, ent = byte_entropy(jnp.asarray(data), block=block, interpret=True)
+    hist_np, ent_np = _entropy_numpy(data)
+    np.testing.assert_array_equal(np.asarray(hist), hist_np)
+    assert int(np.asarray(hist)[0]) == 0, "zero-pad leaked into histogram"
+    assert float(ent) == pytest.approx(ent_np, abs=1e-4)
+
+
+def test_entropy_all_identical_bytes_is_zero():
+    """A constant payload carries 0 bits/byte, exactly."""
+    data = np.full(3000, 7, np.uint8)
+    hist, ent = byte_entropy(jnp.asarray(data), block=512, interpret=True)
+    assert float(ent) == 0.0
+    assert int(np.asarray(hist)[7]) == 3000 and int(np.asarray(hist).sum()) == 3000
+
+
+@pytest.mark.parametrize("n_symbols,expect_bits", [(2, 1.0), (4, 2.0),
+                                                   (256, 8.0)])
+def test_entropy_uniform_alphabet_golden(n_symbols, expect_bits):
+    """Uniform k-symbol alphabets have exactly log2(k) bits/byte."""
+    data = np.tile(np.arange(n_symbols, dtype=np.uint8), 16)
+    _, ent = byte_entropy(jnp.asarray(data), block=128, interpret=True)
+    assert float(ent) == pytest.approx(expect_bits, abs=1e-5)
+
+
 # -------------------------------------------------------------- quant kernel
 @pytest.mark.parametrize("shape", [(4, 256), (1024,), (3, 2, 512)])
 def test_quant_kernel_vs_ref(shape):

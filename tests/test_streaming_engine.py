@@ -1,0 +1,168 @@
+"""StreamingEngine: rolling-window ingest → compact → reoptimize lifecycle,
+tier-state carry-over by file-set identity, and TieredStore.sync_plan.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.costs import azure_table
+from repro.core.engine import ScopeConfig, StreamingEngine
+from repro.data import workloads as wl
+from repro.storage.store import TieredStore
+
+
+def _engine(**kw):
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    sizes = {f"d{i}/{j}": 0.5 + 0.1 * j for i in range(6) for j in range(4)}
+    return StreamingEngine(azure_table(), cfg, sizes, s_thresh=5.0, **kw), sizes
+
+
+def _hot_cold_batch(hot=400.0, cold=0.01):
+    """Two datasets with wildly different traffic — forces distinct tiers."""
+    return [
+        (("d0/0", "d0/1"), hot),
+        (("d1/0", "d1/1", "d1/2"), cold),
+    ]
+
+
+def test_first_batch_places_everything_as_new():
+    eng, _ = _engine()
+    mig = eng.ingest_and_reoptimize(_hot_cold_batch())
+    assert (mig.old_tier == -1).all()
+    assert mig.n_moved == 0 and mig.migration_cents == 0.0
+    assert mig.penalty_cents == 0.0
+    r = eng.history[-1]
+    assert r.n_new == r.n_partitions == 2
+    # hot data lands on a faster tier than cold data
+    tiers = {tuple(sorted(p.files)): int(t) for p, t in
+             zip(mig.plan.problem.partitions, mig.plan.assignment.tier)}
+    assert tiers[("d0/0", "d0/1")] < tiers[("d1/0", "d1/1", "d1/2")]
+
+
+def test_steady_stream_is_idempotent():
+    """window=1 makes repeated identical batches a no-drift stream: after
+    the first placement no partition ever moves and nothing is charged."""
+    eng, _ = _engine(window=1, drift_threshold=np.inf)
+    eng.ingest_and_reoptimize(_hot_cold_batch())
+    for _ in range(3):
+        mig = eng.ingest_and_reoptimize(_hot_cold_batch())
+        assert mig.n_moved == 0
+        assert mig.migration_cents == 0.0 and mig.penalty_cents == 0.0
+        assert (mig.new_tier == mig.old_tier).all()
+
+
+def test_drift_triggers_bounded_migration_and_state_carry():
+    """Cold->hot drift moves exactly the drifted partition; its survivor
+    keeps tier identity across the fold."""
+    eng, _ = _engine(window=1, drift_threshold=np.inf)
+    mig0 = eng.ingest_and_reoptimize(_hot_cold_batch())
+    cold_files = frozenset({"d1/0", "d1/1", "d1/2"})
+    # same structure, cold dataset turns hot
+    mig = eng.ingest_and_reoptimize(_hot_cold_batch(hot=400.0, cold=500.0))
+    idx = [i for i, p in enumerate(mig.plan.problem.partitions)
+           if p.files == cold_files]
+    assert len(idx) == 1
+    i = idx[0]
+    assert mig.old_tier[i] >= 0, "survivor must carry its placement state"
+    assert mig.moved[i] and mig.new_tier[i] < mig.old_tier[i]
+    assert mig.migration_cents > 0.0
+    # the untouched hot partition did not move
+    other = [i2 for i2 in range(len(mig.moved)) if i2 != i]
+    assert not mig.moved[other].any()
+    assert mig0.plan.problem.n == mig.plan.problem.n
+
+
+def test_migration_charged_once_then_stable():
+    """After paying for a drift-induced move, re-ingesting the same rates
+    charges nothing further (hysteresis at the stream level)."""
+    eng, _ = _engine(window=1, drift_threshold=np.inf)
+    eng.ingest_and_reoptimize(_hot_cold_batch())
+    drifted = _hot_cold_batch(hot=400.0, cold=500.0)
+    mig1 = eng.ingest_and_reoptimize(drifted)
+    assert mig1.n_moved >= 1
+    for _ in range(2):
+        mig = eng.ingest_and_reoptimize(drifted)
+        assert mig.n_moved == 0
+        assert mig.migration_cents == 0.0 and mig.penalty_cents == 0.0
+
+
+def test_minimum_stay_clock_carries_across_batches():
+    """months accumulate for unmoved partitions, so early-deletion pricing
+    sees the true residency, not per-batch resets."""
+    eng, _ = _engine(window=1, drift_threshold=np.inf)
+    eng.ingest_and_reoptimize(_hot_cold_batch(), months=1.0)
+    eng.ingest_and_reoptimize(_hot_cold_batch(), months=1.0)
+    held = {tuple(sorted(k)): sts[0].months_held
+            for k, sts in eng._held.items()}
+    assert held[("d0/0", "d0/1")] == pytest.approx(1.0)
+    eng.ingest_and_reoptimize(_hot_cold_batch(), months=2.5)
+    held = {tuple(sorted(k)): sts[0].months_held
+            for k, sts in eng._held.items()}
+    assert held[("d0/0", "d0/1")] == pytest.approx(3.5)
+
+
+def test_enterprise_trace_end_to_end_with_store_sync():
+    """Month-by-month enterprise trace through StreamingEngine, mirrored
+    into a metered TieredStore via sync_plan."""
+    w = wl.generate_workload(n_datasets=40, n_months=6, seed=5)
+    rng = np.random.default_rng(1)
+    sizes = wl.dataset_file_sizes(w)
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    eng = StreamingEngine(azure_table(), cfg, sizes, drift_threshold=0.5)
+    store = TieredStore(azure_table())
+    for batch in wl.stream_query_log(w, rng):
+        if not batch:
+            continue
+        mig = eng.ingest_and_reoptimize(batch, months=1.0)
+        parts = mig.plan.problem.partitions
+        payloads = [b"x" * max(int(p.span * 1e3), 1) for p in parts]
+        stats = store.sync_plan(mig.plan, payloads=payloads)
+        # store ends the month holding exactly the plan's partitions
+        assert len(store.keys()) == len(parts)
+        for n, key in enumerate(store.plan_keys(mig.plan)):
+            assert store.tier_of(key) == int(mig.plan.assignment.tier[n])
+        # sync touches only what the migration plan says moved
+        assert stats["moved"] + stats["reencoded"] >= mig.n_moved - \
+            stats["deleted"] - stats["put"]
+        store.advance_months(1.0)
+    assert eng.history and eng.history[-1].n_partitions > 0
+    assert store.meter.total_cents > 0.0
+
+
+def test_empty_batches_are_noop_and_do_not_freeze_s_thresh():
+    """An empty first batch must neither crash nor lock in a degenerate
+    span cap; the first real batch still sizes s_thresh from its medians."""
+    eng, _ = _engine()
+    eng._s_thresh = None                    # force batch-derived sizing
+    mig = eng.ingest_and_reoptimize([])
+    assert mig.plan.problem.n == 0 and mig.n_moved == 0
+    assert eng.partitioner is None          # creation deferred
+    assert eng.history[-1].n_partitions == 0
+    mig = eng.ingest_and_reoptimize(_hot_cold_batch())
+    assert mig.plan.problem.n == 2
+    assert np.isfinite(eng.partitioner.s_thresh)
+
+
+def test_sync_plan_requires_partitions_and_payloads():
+    eng, _ = _engine()
+    mig = eng.ingest_and_reoptimize(_hot_cold_batch())
+    store = TieredStore(azure_table())
+    with pytest.raises(ValueError):
+        store.sync_plan(mig.plan)           # no raw_bytes, no payloads
+    import dataclasses
+    bad = dataclasses.replace(mig.plan.problem, partitions=None)
+    with pytest.raises(ValueError):
+        store.sync_plan(dataclasses.replace(mig.plan, problem=bad))
+
+
+def test_sync_plan_preserves_foreign_objects():
+    """sync_plan only reconciles gpart-* objects; checkpoints and manual
+    puts survive."""
+    eng, _ = _engine()
+    mig = eng.ingest_and_reoptimize(_hot_cold_batch())
+    store = TieredStore(azure_table())
+    store.put("ckpt-0001", b"model", tier=1)
+    parts = mig.plan.problem.partitions
+    store.sync_plan(mig.plan,
+                    payloads=[b"x" * 100 for _ in parts])
+    assert "ckpt-0001" in store.keys()

@@ -1,4 +1,6 @@
-"""Paper Tables V-VIII + Fig 4 — COMPREDICT prediction quality.
+"""Paper Tables V-VIII + Fig 4 — COMPREDICT prediction quality, plus the
+feature-backend sweep (:func:`run_features`, registered as ``features`` in
+``benchmarks/run.py``).
 
 V    : training-data (random vs queries) x features (size vs weighted
        entropy) ablation, gzip-class codec;
@@ -7,12 +9,15 @@ VII  : ratio prediction on larger/skewed TPC-H;
 VIII : decompression-speed prediction.
 """
 
+import time
+
 import numpy as np
 
 from benchmarks.common import emit, row, timed
-from repro.core.compredict import (build_dataset, query_samples,
-                                   random_samples, train_eval)
+from repro.core.compredict import (build_dataset, extract_features_batch,
+                                   query_samples, random_samples, train_eval)
 from repro.data import tpch
+from repro.data.tables import Table, encode_dtype_classes
 from repro.storage.codecs import codec_by_name
 
 SCHEMES_V1 = [("zlib-6", "row"), ("zstd-3", "row"), ("zlib-6", "col"),
@@ -95,5 +100,61 @@ def run():
     return emit(rows, "tablesV-VIII_compredict")
 
 
+# ------------------------------------------------- feature-backend sweep
+def _synthetic_partitions(n_parts: int, n_rows: int, seed: int = 0):
+    """Mixed-dtype partitions sized like query-result samples."""
+    rng = np.random.default_rng(seed)
+    strs = np.array([f"v{i}" for i in range(40)])
+    out = []
+    for i in range(n_parts):
+        n = n_rows + int(rng.integers(0, n_rows // 2 + 1))
+        out.append(Table(f"p{i}", {
+            "a": rng.integers(0, 50, n),
+            "b": rng.integers(0, 1000, n),
+            "x": rng.normal(size=n).round(2),
+            "y": rng.normal(size=n),
+            "s": rng.choice(strs[:5], n),
+            "t": rng.choice(strs, n),
+        }))
+    return out
+
+
+def run_features():
+    """NumPy loop vs batched device extraction (kind='bucketed', the full
+    COMPREDICT feature set). 'jnp_extract' is the per-batch hot-path cost
+    once partitions are dictionary-encoded (the paper's one-time pass,
+    reported separately as 'encode'); acceptance bar: >= 10x over the NumPy
+    loop at N >= 500 on CPU jit alone."""
+    rows = []
+    for N, n_rows in ((64, 150), (200, 150), (500, 150), (1000, 150)):
+        tabs = _synthetic_partitions(N, n_rows, seed=N)
+        sizes = [t.nbytes("col") for t in tabs]
+        _, us_np = timed(lambda: extract_features_batch(
+            tabs, "col", "bucketed", "numpy", sizes=sizes), repeats=1)
+        enc, us_enc = timed(lambda: encode_dtype_classes(tabs), repeats=1)
+        fn = lambda: extract_features_batch(          # noqa: E731
+            tabs, "col", "bucketed", "jnp", sizes=sizes, encoded=enc)
+        fn()                                          # warm the jit cache
+        _, us_jnp = timed(fn, repeats=3)
+        _, us_tot = timed(lambda: extract_features_batch(
+            tabs, "col", "bucketed", "jnp", sizes=sizes), repeats=1)
+        rows.append(row(f"features/N{N}/numpy_loop", us_np))
+        rows.append(row(f"features/N{N}/encode_once", us_enc))
+        rows.append(row(f"features/N{N}/jnp_extract", us_jnp,
+                        speedup_vs_numpy=round(us_np / us_jnp, 1)))
+        rows.append(row(f"features/N{N}/jnp_encode_plus_extract", us_tot,
+                        speedup_vs_numpy=round(us_np / us_tot, 1)))
+    # Pallas interpret mode is a correctness vehicle, not a CPU fast path:
+    # record its overhead at small N so regressions are visible.
+    tabs = _synthetic_partitions(32, 100, seed=1)
+    enc = encode_dtype_classes(tabs)
+    t0 = time.perf_counter()
+    extract_features_batch(tabs, "col", "bucketed", "pallas", encoded=enc)
+    rows.append(row("features/N32/pallas_interpret",
+                    (time.perf_counter() - t0) * 1e6))
+    return emit(rows, "feature_backends")
+
+
 if __name__ == "__main__":
     run()
+    run_features()

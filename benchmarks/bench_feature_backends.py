@@ -1,0 +1,14 @@
+"""Feature-extraction backend sweep (thin entry point for run.py's
+``features`` tag): NumPy per-partition loop vs the batched jnp/Pallas
+COMPREDICT pipeline. Implementation lives in bench_compredict.run_features
+so the COMPREDICT benches stay in one module."""
+
+from benchmarks.bench_compredict import run_features
+
+
+def run():
+    return run_features()
+
+
+if __name__ == "__main__":
+    run()

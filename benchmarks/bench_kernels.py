@@ -65,6 +65,22 @@ def run():
     _, us = timed(lambda: be(data).block_until_ready())
     rows.append(row("kernel/byte_entropy_1MB", us,
                     mbps_cpu=round(1.0 / (us / 1e6), 1)))
+
+    # batched weighted-entropy features (COMPREDICT, 512 partitions)
+    N, M, V, nb = 512, 1024, 256, 5
+    codes = jax.random.randint(key, (N, M), 0, V, jnp.int32)
+    n_cols = jnp.full((N,), 4, jnp.int32)
+    n_valid = jax.random.randint(jax.random.fold_in(key, 1), (N,),
+                                 M // 2, M + 1, jnp.int32) // 4 * 4
+    n_rows_ = n_valid // 4
+    lens = jax.random.uniform(key, (N, V), jnp.float32, 1.0, 12.0)
+    wef = jax.jit(lambda *a: ops.weighted_entropy_features(
+        *a, n_buckets=nb, impl="ref")[0])
+    wef(codes, n_valid, n_rows_, n_cols, lens).block_until_ready()
+    _, us = timed(lambda: wef(codes, n_valid, n_rows_, n_cols,
+                              lens).block_until_ready())
+    rows.append(row("kernel/weighted_entropy_512x1k", us,
+                    mvals_per_s=round(N * M / us, 1)))
     return emit(rows, "kernels_micro")
 
 

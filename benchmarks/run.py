@@ -13,6 +13,7 @@ MODULES = [
     ("tableIII", "benchmarks.bench_access_predict"),
     ("tableIV", "benchmarks.bench_optassign_baselines"),
     ("tablesV-VIII", "benchmarks.bench_compredict"),
+    ("features", "benchmarks.bench_feature_backends"),
     ("fig7", "benchmarks.bench_gpart"),
     ("tablesIX-XI", "benchmarks.bench_scope_pipeline"),
     ("reopt", "benchmarks.bench_reoptimize"),

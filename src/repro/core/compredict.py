@@ -15,13 +15,32 @@ Everything here is label-generation + feature extraction; models come from
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import ml
-from repro.data.tables import Table, dtype_class, DTYPE_CLASSES
+from repro.data.tables import (ClassCodes, Table, dtype_class,
+                               encode_dtype_classes, DTYPE_CLASSES)
 from repro.storage.codecs import Codec, default_codecs, measure
+
+#: Selectable feature-extraction backends (see :func:`extract_features_batch`):
+#: 'numpy' is the per-partition string/unique loop; 'jnp' and 'pallas' run
+#: the batched device pipeline in kernels/entropy_features.py on a one-pass
+#: dictionary encoding of all N partitions.
+FEATURE_BACKENDS = ("numpy", "jnp", "pallas")
+
+
+def _bucket_edges(n: int, n_buckets: int) -> np.ndarray:
+    """Exact integer bucket edges: edge[b] = floor(b*n/n_buckets).
+
+    Computed in integer arithmetic so every row is covered exactly once —
+    ``np.linspace(0, n, k+1).astype(int)`` truncates *float* intermediates,
+    and a representation error of one ulp below b*n/k would drop a row at
+    the bucket boundary (pinned by tests/test_compredict_backends.py).
+    """
+    return (np.arange(n_buckets + 1, dtype=np.int64) * int(n)) // n_buckets
 
 
 # ------------------------------------------------------------------ features
@@ -52,7 +71,7 @@ def bucketed_weighted_entropy(table: Table, n_buckets: int = 5) -> List[float]:
     feature): captures local repetition that column sorting creates."""
     n = table.num_rows
     feats: List[float] = []
-    edges = np.linspace(0, n, n_buckets + 1).astype(int)
+    edges = _bucket_edges(n, n_buckets)
     for lo, hi in zip(edges[:-1], edges[1:]):
         h = weighted_entropy(table.select(slice(lo, hi)))
         feats.extend(h[d] for d in DTYPE_CLASSES)
@@ -73,19 +92,23 @@ def _entropy_block(table: Table) -> List[float]:
             continue
         vals = np.concatenate(cols)
         uniq, counts = np.unique(vals, return_counts=True)
-        pr = counts / counts.sum()
+        pr = counts / max(counts.sum(), 1)    # 0-row partitions: all zeros
         lens = np.char.str_len(uniq.astype(str))
         feats += [float(-(lens * pr * np.log(pr + 1e-300)).sum()),   # H(P,d)
                   float(-(pr * np.log(pr + 1e-300)).sum()),
-                  len(uniq) / len(vals),
+                  len(uniq) / max(len(vals), 1),
                   float(lens @ pr),
                   float(len(cols))]
     return feats
 
 
 def extract_features(table: Table, layout: str, kind: str = "weighted_entropy",
-                     ) -> np.ndarray:
-    size = table.nbytes(layout)
+                     *, size: Optional[int] = None,
+                     n_buckets: int = 5) -> np.ndarray:
+    """Feature vector for one partition. ``size`` short-circuits the
+    serialized-size probe when the caller already holds the raw bytes."""
+    if size is None:
+        size = table.nbytes(layout)
     n_rows = max(table.num_rows, 1)
     if kind == "size":
         return np.array([np.log1p(size), np.log1p(n_rows),
@@ -95,8 +118,90 @@ def extract_features(table: Table, layout: str, kind: str = "weighted_entropy",
         return np.array(base + _entropy_block(table), float)
     if kind == "bucketed":
         return np.array(base + _entropy_block(table)
-                        + bucketed_weighted_entropy(table), float)
+                        + bucketed_weighted_entropy(table, n_buckets), float)
     raise ValueError(kind)
+
+
+# ------------------------------------------------------- batched extraction
+@functools.lru_cache(maxsize=8)
+def _jit_wef_ref(n_buckets: int):
+    import jax
+    from repro.kernels.entropy_features import weighted_entropy_features_ref
+    return jax.jit(functools.partial(weighted_entropy_features_ref,
+                                     n_buckets=n_buckets))
+
+
+def _batched_entropy_columns(cc: ClassCodes, n_buckets: int, backend: str,
+                             interpret: Optional[bool]) -> Tuple[np.ndarray,
+                                                                 np.ndarray]:
+    """(summary (N,4), bucket_H (N,n_buckets)) for one dtype class via the
+    selected device path."""
+    if backend == "jnp":
+        summary, buck = _jit_wef_ref(n_buckets)(
+            cc.codes, cc.n_valid, cc.n_rows, cc.n_cols, cc.lengths)
+    else:                                    # 'pallas'
+        import jax
+        from repro.kernels.entropy_features import weighted_entropy_features
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        summary, buck = weighted_entropy_features(
+            cc.codes, cc.n_valid, cc.n_rows, cc.n_cols, cc.lengths,
+            n_buckets=n_buckets, interpret=interpret)
+    return np.asarray(summary, np.float64), np.asarray(buck, np.float64)
+
+
+def extract_features_batch(tables: Sequence[Table], layout: str,
+                           kind: str = "weighted_entropy",
+                           backend: str = "numpy", *,
+                           sizes: Optional[Sequence[int]] = None,
+                           n_buckets: int = 5,
+                           encoded: Optional[Dict[str, ClassCodes]] = None,
+                           interpret: Optional[bool] = None) -> np.ndarray:
+    """(N, F) feature matrix for N partitions in one pass.
+
+    backend 'numpy' loops :func:`extract_features`; 'jnp' and 'pallas'
+    dictionary-encode all partitions once (or reuse ``encoded`` from
+    :func:`repro.data.tables.encode_dtype_classes`) and compute every
+    entropy feature in a single batched device dispatch — the COMPREDICT
+    hot path for ``CompressStage``/``StreamingEngine`` re-prediction.
+    'pallas' auto-selects interpret mode off-TPU unless ``interpret`` is
+    forced. All backends agree to ~1e-5 (tests/test_compredict_backends.py).
+    """
+    if backend not in FEATURE_BACKENDS:
+        raise ValueError(f"backend must be one of {FEATURE_BACKENDS}, "
+                         f"got {backend!r}")
+    N = len(tables)
+    if sizes is None:
+        sizes = [t.nbytes(layout) for t in tables]
+    if N == 0:
+        width = {"size": 3, "weighted_entropy": 3 + 5 * len(DTYPE_CLASSES),
+                 "bucketed": 3 + (5 + n_buckets) * len(DTYPE_CLASSES)}[kind]
+        return np.zeros((0, width), float)
+    if backend == "numpy" or kind == "size":
+        return np.stack([extract_features(t, layout, kind, size=s,
+                                          n_buckets=n_buckets)
+                         for t, s in zip(tables, sizes)])
+    if kind not in ("weighted_entropy", "bucketed"):
+        raise ValueError(kind)
+    enc = encoded if encoded is not None else encode_dtype_classes(tables)
+    per_class = {d: _batched_entropy_columns(
+        enc[d], n_buckets if kind == "bucketed" else 1, backend, interpret)
+        for d in DTYPE_CLASSES}
+    sizes_a = np.asarray(sizes, float)
+    n_rows = np.maximum(np.array([t.num_rows for t in tables], float), 1.0)
+    cols = [np.log1p(sizes_a), np.log1p(n_rows), sizes_a / n_rows]
+    for d in DTYPE_CLASSES:
+        summary, _ = per_class[d]
+        has = (enc[d].n_cols > 0).astype(float)    # no columns -> all zeros
+        cols += [summary[:, 0] * has, summary[:, 1] * has,
+                 summary[:, 2] * has, summary[:, 3] * has,
+                 enc[d].n_cols.astype(float)]
+    if kind == "bucketed":
+        for b in range(n_buckets):
+            for d in DTYPE_CLASSES:
+                _, buck = per_class[d]
+                cols.append(buck[:, b] * (enc[d].n_cols > 0))
+    return np.stack(cols, axis=1)
 
 
 # ------------------------------------------------------------------ sampling
@@ -187,12 +292,22 @@ def train_eval(ds: LabeledSet, model_name: str, target: str,
 
 class CompressionPredictor:
     """Production interface: per-(scheme, layout) RF models predicting
-    (ratio, decompression sec/GB) from weighted-entropy features."""
+    (ratio, decompression sec/GB) from weighted-entropy features.
+
+    ``feature_backend`` selects how :meth:`predict_matrix` extracts
+    features for a batch of partitions ('numpy' | 'jnp' | 'pallas', see
+    :func:`extract_features_batch`); training always uses the NumPy path
+    (label measurement dominates there anyway)."""
 
     def __init__(self, feature_kind: str = "weighted_entropy",
-                 model_name: str = "RandomForest"):
+                 model_name: str = "RandomForest",
+                 feature_backend: str = "numpy"):
+        if feature_backend not in FEATURE_BACKENDS:
+            raise ValueError(f"feature_backend must be one of "
+                             f"{FEATURE_BACKENDS}, got {feature_backend!r}")
         self.feature_kind = feature_kind
         self.model_name = model_name
+        self.feature_backend = feature_backend
         self.models: Dict[Tuple[str, str, str], object] = {}
 
     def fit(self, samples: Sequence[Table], layouts: Sequence[str] = ("row", "col"),
@@ -218,12 +333,30 @@ class CompressionPredictor:
         return max(r, 1.0), max(d, 0.0)
 
     def predict_matrix(self, tables: Sequence[Table], schemes: Sequence[str],
-                       layout: str) -> Tuple[np.ndarray, np.ndarray]:
-        """(N,K) ratio and decompression-sec/GB matrices for OPTASSIGN."""
+                       layout: str, *,
+                       sizes: Optional[Sequence[int]] = None,
+                       feature_backend: Optional[str] = None,
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """(N,K) ratio and decompression-sec/GB matrices for OPTASSIGN.
+
+        Features are extracted once for all N partitions via
+        :func:`extract_features_batch` (backend from ``feature_backend`` or
+        the constructor default) and each per-(scheme, target) model
+        predicts the whole batch in one call — no N×K Python loop.
+        ``sizes`` forwards known serialized byte counts."""
         N, K = len(tables), len(schemes)
         R = np.ones((N, K))
         D = np.zeros((N, K))
-        for i, t in enumerate(tables):
-            for k, s in enumerate(schemes):
-                R[i, k], D[i, k] = self.predict(t, s, layout)
+        if N == 0:
+            return R, D
+        backend = feature_backend or self.feature_backend
+        X = extract_features_batch(tables, layout, self.feature_kind,
+                                   backend, sizes=sizes)
+        for k, s in enumerate(schemes):
+            if s == "none":
+                continue                       # (1, 0) by definition
+            R[:, k] = np.maximum(
+                self.models[(s, layout, "ratio")].predict(X), 1.0)
+            D[:, k] = np.maximum(
+                self.models[(s, layout, "dspeed")].predict(X), 0.0)
         return R, D

@@ -54,6 +54,7 @@ class ScopeConfig:
     rho_c: float = 4.0
     rho_c_abs: float = 10.0
     predictor: str = "truth"                 # 'truth' | fitted CompressionPredictor
+    feature_backend: str = "numpy"           # 'numpy' | 'jnp' | 'pallas'
     fixed_tier: Optional[int] = None         # e.g. 0 -> 'store on premium'
 
 
@@ -197,7 +198,13 @@ class PartitionStage:
 
 class CompressStage:
     """Per-partition (ratio, decompression-time) matrices — measured ground
-    truth or a fitted COMPREDICT model."""
+    truth or a fitted COMPREDICT model.
+
+    With a fitted predictor, features for all N partitions are extracted by
+    ``cfg.feature_backend`` ('numpy' per-partition loop, or the batched
+    'jnp'/'pallas' device pipeline — one dispatch for the whole batch) and
+    serialized sizes are reused from :class:`PartitionStage` instead of
+    re-serializing every table."""
 
     def __init__(self, cfg: ScopeConfig):
         self.cfg = cfg
@@ -221,7 +228,10 @@ class CompressStage:
                         D[i, k] = m.decompress_sec_per_gb * (len(b) / 1e9)
             else:
                 pred = cfg.predictor  # fitted CompressionPredictor instance
-                Rm, Dm = pred.predict_matrix(data.tables, schemes, cfg.layout)
+                Rm, Dm = pred.predict_matrix(
+                    data.tables, schemes, cfg.layout,
+                    sizes=[len(b) for b in data.raw_bytes],
+                    feature_backend=cfg.feature_backend)
                 R = Rm
                 D = Dm * data.spans_gb[:, None]  # sec/GB -> sec per partition
         return PlacementProblem(
@@ -429,6 +439,43 @@ class PlacementEngine:
 
 
 # --------------------------------------------------------------- streaming
+def compredict_rd_fn(predictor, file_rows: Dict[str, Tuple[Table, np.ndarray]],
+                     *, layout: str = "col",
+                     feature_backend: Optional[str] = None) -> Callable:
+    """Build a :class:`StreamingEngine` ``rd_fn`` from a fitted
+    ``CompressionPredictor``.
+
+    Each batch, the current partitions are materialized from ``file_rows``
+    (as in :class:`PartitionStage`) and the predictor's batched
+    ``predict_matrix`` — feature extraction in one device dispatch under
+    ``feature_backend`` — supplies (R, D) so per-batch re-prediction stays
+    off the N×K Python-loop path. Materialized tables and serialized sizes
+    are cached by partition file-set identity (the same key the engine
+    carries placement state under), so partitions that survive a fold pay
+    no re-materialization or re-serialization on later batches; the cache
+    is pruned to the live partition set each call. Returned D is
+    whole-partition seconds, as :class:`PlacementProblem` expects."""
+    cache: Dict[FrozenSet[str], Tuple[Table, int]] = {}
+
+    def rd_fn(parts: List[datapart.Partition],
+              schemes: Sequence[str]) -> Tuple[np.ndarray, np.ndarray]:
+        missing = [p for p in parts if p.files not in cache]
+        if missing:
+            for p, t in zip(missing,
+                            PartitionStage._partition_tables(missing,
+                                                             file_rows)):
+                cache[p.files] = (t, t.nbytes(layout))
+        for stale in set(cache) - {p.files for p in parts}:
+            del cache[stale]
+        tables = [cache[p.files][0] for p in parts]
+        sizes = [cache[p.files][1] for p in parts]
+        spans_gb = np.array([p.span for p in parts], np.float64)
+        R, Dm = predictor.predict_matrix(tables, schemes, layout, sizes=sizes,
+                                         feature_backend=feature_backend)
+        return R, Dm * spans_gb[:, None]
+    return rd_fn
+
+
 @dataclasses.dataclass
 class StreamStepReport:
     """Per-batch summary of an ``ingest_and_reoptimize`` step."""
@@ -467,9 +514,11 @@ class StreamingEngine:
     (``current_tier = -1`` — pure ingestion write cost).
 
     ``rd_fn(partitions, schemes) -> (R, D)`` optionally supplies
-    compression ratio / decompression-time matrices (e.g. a fitted
-    COMPREDICT model); without it the stream is placed uncompressed, which
-    is the right default when only access-log metadata is available.
+    compression ratio / decompression-time matrices (e.g.
+    :func:`compredict_rd_fn` wrapping a fitted COMPREDICT model with
+    batched device feature extraction); without it the stream is placed
+    uncompressed, which is the right default when only access-log metadata
+    is available.
     """
 
     def __init__(self, table: CostTable, cfg: ScopeConfig,

@@ -1,10 +1,29 @@
-"""COMPREDICT byte-entropy feature kernel.
+"""COMPREDICT entropy feature kernels.
 
 The paper's feature pass is a full scan of each partition (its stated
-one-time compute cost, §V). On TPU we compute the byte histogram with a
-one-hot matmul per VMEM block — (block, 256) f32 one-hot against a ones
-vector rides the MXU — accumulating into a (1, 256) scratch across the
-sequential grid axis; entropy is reduced on the final step.
+one-time compute cost, §V). Two device-resident primitives live here:
+
+* :func:`byte_entropy` — byte histogram + Shannon entropy of one payload.
+  On TPU the histogram is a one-hot matmul per VMEM block — (block, 256)
+  f32 one-hot against a ones vector rides the MXU — accumulating into a
+  (1, 256) scratch across the sequential grid axis.
+* :func:`weighted_entropy_features` — the batched COMPREDICT pipeline:
+  per-dtype-class weighted entropy H(P,d), plain entropy, distinct
+  fraction, and mean value length for N partitions at once, plus the
+  bucketed successive-20%-of-rows entropy variant, with ragged-length and
+  pad masking. The grid is (partitions × code blocks); per block a
+  (n_buckets, block) × (block, vocab) one-hot matmul scatters counts into
+  a per-bucket histogram scratch, and features are reduced on the final
+  block. :func:`weighted_entropy_features_ref` is the ``jax.vmap``-based
+  pure-jnp oracle with identical semantics.
+
+Inputs for the batched form come from
+:func:`repro.data.tables.encode_dtype_classes` (shared-vocabulary int32
+codes, row-major within a partition); the consumer-facing seam is
+``repro.core.compredict.extract_features_batch`` (see ``docs/engine.md``,
+"Feature backends"). Weighted entropy uses the natural log to match
+``repro.core.compredict.weighted_entropy``; :func:`byte_entropy` reports
+bits/byte (log2).
 """
 
 from __future__ import annotations
@@ -63,3 +82,156 @@ def byte_entropy(data, *, block: int = 8192, interpret: bool = False):
         interpret=interpret,
     )(d)
     return hist[0], ent[0, 0]
+
+
+# ---------------------------------------------- batched weighted entropy
+def _wef_kernel(codes_ref, meta_ref, len_ref, sum_ref, buck_ref, hist_scr,
+                *, block: int, n_buckets: int, vpad: int):
+    """Grid (partition, code block). Scratch is the per-bucket histogram of
+    the current partition; features are reduced on its final block."""
+    bi = pl.program_id(1)
+    nb_blocks = pl.num_programs(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        hist_scr[...] = jnp.zeros_like(hist_scr)
+
+    nv = meta_ref[0, 0]                            # values in this partition
+    nr = meta_ref[0, 1]                            # rows
+    nc = meta_ref[0, 2]                            # columns of this class
+    code = codes_ref[...].astype(jnp.int32)[0]                     # (block,)
+    pos = bi * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)[0]
+    valid = pos < nv                               # pad codes are -1 anyway
+    code_oh = ((code[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, vpad), 1)) & valid[:, None]).astype(jnp.float32)
+    if n_buckets == 1:
+        hist_scr[...] += code_oh.sum(axis=0, keepdims=True)
+    else:
+        # bucket b spans rows [floor(b*nr/nb), floor((b+1)*nr/nb)); the
+        # value at flat position p sits in row p // n_cols (row-major view)
+        row = pos // jnp.maximum(nc, 1)
+        b_iota = jax.lax.broadcasted_iota(
+            jnp.int32, (block, n_buckets - 1), 1) + 1
+        edges = (b_iota * nr) // n_buckets
+        bucket = (row[:, None] >= edges).sum(axis=1)               # (block,)
+        bucket_oh = (jax.lax.broadcasted_iota(
+            jnp.int32, (n_buckets, block), 0) == bucket[None, :]
+        ).astype(jnp.float32)
+        hist_scr[...] += jnp.dot(bucket_oh, code_oh,
+                                 preferred_element_type=jnp.float32)
+
+    @pl.when(bi == nb_blocks - 1)
+    def _finalize():
+        lens = len_ref[...]                                      # (1, vpad)
+        hist_b = hist_scr[...]                                   # (nb, vpad)
+        hist = hist_b.sum(axis=0, keepdims=True)
+        total = jnp.maximum(nv.astype(jnp.float32), 1.0)
+        p = hist / total
+        plogp = jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-30)), 0.0)
+        sum_ref[0, 0] = -jnp.sum(lens * plogp)                   # H(P,d)
+        sum_ref[0, 1] = -jnp.sum(plogp)                          # plain H
+        sum_ref[0, 2] = jnp.sum((hist > 0).astype(jnp.float32)) / total
+        sum_ref[0, 3] = jnp.sum(lens * p)                        # mean len
+        tot_b = jnp.maximum(hist_b.sum(axis=1, keepdims=True), 1.0)
+        pb = hist_b / tot_b
+        plogpb = jnp.where(pb > 0, pb * jnp.log(jnp.maximum(pb, 1e-30)), 0.0)
+        buck_ref[...] = -(lens * plogpb).sum(axis=1)[None, :]
+
+
+def _as_batched_lengths(lengths, N: int) -> jnp.ndarray:
+    """(V,) shared vocab -> (N, V); (N, Vmax) per-partition passes through."""
+    lengths = jnp.asarray(lengths, jnp.float32)
+    if lengths.ndim == 1:
+        lengths = jnp.broadcast_to(lengths[None, :], (N, lengths.shape[0]))
+    return lengths
+
+
+def weighted_entropy_features(codes, n_valid, n_rows, n_cols, lengths, *,
+                              n_buckets: int = 1, block: int = 512,
+                              interpret: bool = False):
+    """Batched per-partition weighted-entropy features, one device dispatch.
+
+    codes: (N, M) int32 value codes, -1 padded; n_valid / n_rows / n_cols:
+    (N,) int32 ragged-shape metadata; lengths: per-slot string lengths,
+    either (N, Vmax) local vocabularies (what
+    :func:`repro.data.tables.encode_dtype_classes` produces — histogram
+    width stays at the per-partition cardinality) or a (V,) vocabulary
+    shared by every partition.
+
+    Returns ``(summary (N, 4) f32, bucket_H (N, n_buckets) f32)`` where the
+    summary columns are [weighted entropy H(P,d), plain entropy, distinct
+    fraction, mean value length] — natural-log, matching
+    ``repro.core.compredict.weighted_entropy`` / ``_entropy_block`` — and
+    ``bucket_H[:, b]`` is the weighted entropy of the b-th 1/n_buckets of
+    rows (``repro.core.compredict.bucketed_weighted_entropy``).
+    """
+    codes = jnp.asarray(codes, jnp.int32)
+    N, M = codes.shape
+    block = min(block, max(M, 1))
+    pad = (-M) % block
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad)), constant_values=-1)
+    nb_blocks = codes.shape[1] // block
+    lengths = _as_batched_lengths(lengths, N)
+    V = lengths.shape[1]
+    vpad = -(-V // 128) * 128                      # lane-aligned vocabulary
+    lens = jnp.pad(lengths, ((0, 0), (0, vpad - V)))
+    meta = jnp.stack([jnp.asarray(n_valid), jnp.asarray(n_rows),
+                      jnp.asarray(n_cols)], axis=1).astype(jnp.int32)
+    kernel = functools.partial(_wef_kernel, block=block,
+                               n_buckets=n_buckets, vpad=vpad)
+    return pl.pallas_call(
+        kernel,
+        grid=(N, nb_blocks),
+        in_specs=[pl.BlockSpec((1, block), lambda i, bi: (i, bi)),
+                  pl.BlockSpec((1, 3), lambda i, bi: (i, 0)),
+                  pl.BlockSpec((1, vpad), lambda i, bi: (i, 0))],
+        out_specs=[pl.BlockSpec((1, 4), lambda i, bi: (i, 0)),
+                   pl.BlockSpec((1, n_buckets), lambda i, bi: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((N, 4), jnp.float32),
+                   jax.ShapeDtypeStruct((N, n_buckets), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((n_buckets, vpad), jnp.float32)],
+        interpret=interpret,
+    )(codes, meta, lens)
+
+
+def weighted_entropy_features_ref(codes, n_valid, n_rows, n_cols, lengths, *,
+                                  n_buckets: int = 1):
+    """Pure-jnp oracle for :func:`weighted_entropy_features`: one partition
+    is a (n_buckets, V) scatter-add histogram + entropy reduction, vmapped
+    over the batch. Jit-able with ``n_buckets`` static."""
+    codes = jnp.asarray(codes, jnp.int32)
+    N, M = codes.shape
+    lengths = _as_batched_lengths(lengths, N)
+    V = lengths.shape[1]
+    nb = n_buckets
+
+    def one(code_row, nv, nr, nc, lens):
+        pos = jnp.arange(M, dtype=jnp.int32)
+        valid = pos < nv
+        safe = jnp.where(valid, code_row, 0)
+        if nb == 1:
+            bucket = jnp.zeros(M, jnp.int32)
+        else:
+            row = pos // jnp.maximum(nc, 1)
+            edges = (jnp.arange(1, nb, dtype=jnp.int32) * nr) // nb
+            bucket = (row[:, None] >= edges[None, :]).sum(axis=1)
+        hist_b = jnp.zeros((nb, V), jnp.float32).at[bucket, safe].add(
+            valid.astype(jnp.float32))
+        hist = hist_b.sum(axis=0)
+        total = jnp.maximum(nv.astype(jnp.float32), 1.0)
+        p = hist / total
+        plogp = jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-30)), 0.0)
+        summary = jnp.stack([
+            -jnp.sum(lens * plogp),
+            -jnp.sum(plogp),
+            jnp.sum((hist > 0).astype(jnp.float32)) / total,
+            jnp.sum(lens * p)])
+        tot_b = jnp.maximum(hist_b.sum(axis=1, keepdims=True), 1.0)
+        pb = hist_b / tot_b
+        plogpb = jnp.where(pb > 0, pb * jnp.log(jnp.maximum(pb, 1e-30)), 0.0)
+        return summary, -(lens[None, :] * plogpb).sum(axis=1)
+
+    return jax.vmap(one)(codes, jnp.asarray(n_valid, jnp.int32),
+                         jnp.asarray(n_rows, jnp.int32),
+                         jnp.asarray(n_cols, jnp.int32), lengths)

@@ -87,6 +87,23 @@ def byte_entropy(data, *, impl: str = "auto"):
     return _ref.byte_entropy_ref(data)
 
 
+def weighted_entropy_features(codes, n_valid, n_rows, n_cols, lengths, *,
+                              n_buckets: int = 1, block: int = 512,
+                              impl: str = "auto"):
+    """Batched COMPREDICT feature primitive (see kernels/entropy_features.py).
+
+    'ref' is the vmapped-jnp path; 'pallas'/'interpret' run the batched
+    grid kernel. Returns (summary (N,4), bucket_H (N,n_buckets))."""
+    from repro.kernels import entropy_features as ek
+    mode = _resolve(impl)
+    if mode in ("pallas", "interpret"):
+        return ek.weighted_entropy_features(
+            codes, n_valid, n_rows, n_cols, lengths, n_buckets=n_buckets,
+            block=block, interpret=(mode == "interpret"))
+    return ek.weighted_entropy_features_ref(
+        codes, n_valid, n_rows, n_cols, lengths, n_buckets=n_buckets)
+
+
 # ------------------------------------------------------------------- quant8
 def quant_pack(x, *, block: int = 256, impl: str = "auto"):
     mode = _resolve(impl)

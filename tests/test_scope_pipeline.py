@@ -1,14 +1,19 @@
 """End-to-end SCOPe pipeline + access prediction (paper §IV-C, §VII)."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.core.access_predict import (optimal_tiers, predicted_tiers,
                                        train_tier_predictor)
+from repro.core.compredict import CompressionPredictor, query_samples
 from repro.core.costs import azure_table
+from repro.core.engine import PlacementEngine
 from repro.core.scope import ScopeConfig, paper_variants, run_pipeline
 from repro.data import tpch
 from repro.data.workloads import generate_workload
+from repro.storage.codecs import available_schemes, codec_by_name
 
 
 @pytest.fixture(scope="module")
@@ -71,6 +76,34 @@ def test_paper_variant_grid(pipeline_inputs):
     # default premium latency is the floor
     assert results["Default (store on premium)"].read_latency_ttfb == \
         pytest.approx(0.0053)
+
+
+def test_feature_backend_parity_end_to_end():
+    """CompressStage with feature_backend='pallas' (interpret on CPU) and
+    'jnp' must produce the *identical* PlacementPlan — same tiers, same
+    schemes — as the NumPy feature loop on a seeded TPC-H-style workload."""
+    db = tpch.generate(scale_rows=900, seed=2)
+    queries = tpch.generate_queries(db, n_per_template=2, seed=3)
+    parts, file_rows = tpch.partitions_from_queries(db, queries)
+    schemes = available_schemes(("none", "zstd-3", "zlib-6", "zlib-1"))
+    pred = CompressionPredictor(model_name="SVR").fit(
+        query_samples(queries, db.tables, max_rows=300)[:40],
+        layouts=("col",),
+        codecs=[codec_by_name(s) for s in schemes if s != "none"])
+    table = azure_table()
+    base_cfg = ScopeConfig(schemes=schemes, predictor=pred,
+                           tier_whitelist=(0, 1, 2))
+    plans = {}
+    for backend in ("numpy", "jnp", "pallas"):
+        cfg = dataclasses.replace(base_cfg, feature_backend=backend)
+        plans[backend] = PlacementEngine(table, cfg).run(parts, file_rows)
+    for backend in ("jnp", "pallas"):
+        np.testing.assert_array_equal(plans[backend].assignment.tier,
+                                      plans["numpy"].assignment.tier)
+        np.testing.assert_array_equal(plans[backend].assignment.scheme,
+                                      plans["numpy"].assignment.scheme)
+        assert plans[backend].report.total_cents == pytest.approx(
+            plans["numpy"].report.total_cents, rel=1e-4)
 
 
 def test_access_prediction_f1():

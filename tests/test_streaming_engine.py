@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.costs import azure_table
-from repro.core.engine import ScopeConfig, StreamingEngine
+from repro.core.engine import ScopeConfig, StreamingEngine, compredict_rd_fn
 from repro.data import workloads as wl
 from repro.storage.store import TieredStore
 
@@ -141,6 +141,76 @@ def test_empty_batches_are_noop_and_do_not_freeze_s_thresh():
     mig = eng.ingest_and_reoptimize(_hot_cold_batch())
     assert mig.plan.problem.n == 2
     assert np.isfinite(eng.partitioner.s_thresh)
+
+
+def _compredict_stream_fixture():
+    """Small TPC-H stream with a fitted predictor wired in via rd_fn."""
+    from repro.core.compredict import CompressionPredictor, query_samples
+    from repro.data import tpch
+    from repro.storage.codecs import available_schemes, codec_by_name
+
+    db = tpch.generate(scale_rows=600, seed=9)
+    queries = tpch.generate_queries(db, n_per_template=2, seed=10)
+    parts, file_rows = tpch.partitions_from_queries(db, queries)
+    schemes = available_schemes(("none", "zstd-3", "zlib-6", "zlib-1"))
+    pred = CompressionPredictor(model_name="SVR").fit(
+        query_samples(queries, db.tables, max_rows=250)[:30],
+        layouts=("col",),
+        codecs=[codec_by_name(s) for s in schemes if s != "none"])
+    sizes = {f: file_rows[f][0].select(file_rows[f][1]).nbytes("col") / 1e9
+             for p in parts for f in p.files}
+    batches = [[(tuple(sorted(p.files)), p.rho) for p in parts[:4]],
+               [(tuple(sorted(p.files)), p.rho * (3.0 if i % 2 else 1.0))
+                for i, p in enumerate(parts[:6])]]
+    return pred, file_rows, sizes, schemes, batches
+
+
+def test_streaming_feature_backend_parity():
+    """Streaming re-prediction through compredict_rd_fn: the Pallas and
+    NumPy feature backends yield the identical per-batch placement."""
+    pred, file_rows, sizes, schemes, batches = _compredict_stream_fixture()
+    migs = {}
+    for backend in ("numpy", "pallas"):
+        cfg = ScopeConfig(months=1.0, schemes=schemes)
+        eng = StreamingEngine(
+            azure_table(), cfg, sizes, s_thresh=5.0,
+            rd_fn=compredict_rd_fn(pred, file_rows, layout="col",
+                                   feature_backend=backend))
+        migs[backend] = [eng.ingest_and_reoptimize(b, months=1.0)
+                        for b in batches]
+    for m_np, m_pal in zip(migs["numpy"], migs["pallas"]):
+        np.testing.assert_array_equal(m_pal.plan.assignment.tier,
+                                      m_np.plan.assignment.tier)
+        np.testing.assert_array_equal(m_pal.plan.assignment.scheme,
+                                      m_np.plan.assignment.scheme)
+        assert m_pal.plan.report.total_cents == pytest.approx(
+            m_np.plan.report.total_cents, rel=1e-4)
+    # compression actually engages on the stream (schemes beyond 'none')
+    assert (migs["numpy"][-1].plan.assignment.scheme > 0).any()
+
+
+def test_compredict_rd_fn_caches_surviving_partitions(monkeypatch):
+    """Partitions that survive across batches must not be re-materialized
+    or re-serialized by compredict_rd_fn (hot-path cost)."""
+    from repro.core import engine as eng_mod
+    pred, file_rows, sizes, schemes, batches = _compredict_stream_fixture()
+    calls = []
+    real = eng_mod.PartitionStage._partition_tables
+
+    def spy(parts, fr):
+        calls.append(len(parts))
+        return real(parts, fr)
+
+    monkeypatch.setattr(eng_mod.PartitionStage, "_partition_tables",
+                        staticmethod(spy))
+    cfg = ScopeConfig(months=1.0, schemes=schemes)
+    eng = StreamingEngine(azure_table(), cfg, sizes, s_thresh=5.0,
+                          window=1, drift_threshold=np.inf,
+                          rd_fn=compredict_rd_fn(pred, file_rows))
+    eng.ingest_and_reoptimize(batches[0], months=1.0)
+    assert len(calls) == 1 and calls[0] > 0  # first batch: all materialized
+    eng.ingest_and_reoptimize(batches[0], months=1.0)
+    assert len(calls) == 1                   # identical batch: pure cache hit
 
 
 def test_sync_plan_requires_partitions_and_payloads():

@@ -1,0 +1,148 @@
+"""Multi-cloud placement — cross-provider vs best single-provider plans.
+
+Enterprise-trace workloads (the Table II customer generator) are placed in
+the flattened AWS+GCP+Azure ``(provider, tier)`` space (`costs.big3_table`)
+and compared against the best plan restricted to any one provider
+(`ScopeConfig.provider_whitelist`). Because the flattened space is a strict
+superset of every single-provider space, the cross-provider plan can never
+be costlier; the recorded `cross_vs_best_single_pct` shows how much of the
+bill provider arbitrage actually removes. Also recorded:
+
+ * a capped sweep — finite per-provider capacities exercising the group
+   constraint rows in the vectorized capacitated solver,
+ * a drift step — `PlacementEngine.reoptimize` across providers, with the
+   one-off egress bill the optimizer internalized.
+
+Set ``BENCH_SMOKE=1`` to shrink to a seconds-long CI smoke run.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, row, timed
+from repro.core.costs import big3_table
+from repro.core.engine import PlacementEngine, PlacementProblem, ScopeConfig
+from repro.data.workloads import generate_workload
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+CUSTOMERS = {
+    # (n_datasets, size mu/sigma, seed) — Table II calibration
+    "C": (160, (5.2, 2.0), 2),
+    "D": (210, (5.3, 2.0), 3),
+} if not SMOKE else {"S": (24, (4.0, 1.5), 0)}
+
+SCHEMES = ("none", "lz4", "zstd")
+
+
+def _problem(table, cfg, n, lognorm, seed):
+    w = generate_workload(n_datasets=n, n_months=24, seed=seed,
+                          size_lognorm=lognorm)
+    spans = np.array([d.size_gb for d in w.datasets])
+    rho = w.reads_in(12, 18).astype(np.float64)
+    rng = np.random.default_rng(seed)
+    K = len(SCHEMES)
+    R = np.concatenate([np.ones((n, 1)), rng.uniform(1.2, 6.0, (n, K - 1))],
+                       1)
+    D = np.concatenate([np.zeros((n, 1)),
+                        rng.uniform(0.01, 2.0, (n, K - 1)) * spans[:, None]],
+                       1)
+    return PlacementProblem(spans_gb=spans, rho=rho,
+                            current_tier=np.full(n, -1), R=R, D=D,
+                            schemes=SCHEMES, table=table, cfg=cfg)
+
+
+def run():
+    rows = []
+    table = big3_table()
+    months = 6.0
+    for cust, (n, lognorm, seed) in CUSTOMERS.items():
+        cfg = ScopeConfig(schemes=SCHEMES, months=months)
+        problem = _problem(table, cfg, n, lognorm, seed)
+        eng = PlacementEngine(table, cfg)
+        plan, us = timed(lambda: eng.solve(problem), repeats=1)
+        cross = plan.report.total_cents
+
+        singles = {}
+        for p in table.provider_names:
+            c1 = ScopeConfig(schemes=SCHEMES, months=months,
+                             provider_whitelist=(p,))
+            prob1 = _problem(table, c1, n, lognorm, seed)
+            singles[p] = PlacementEngine(table, c1).solve(
+                prob1).report.total_cents
+        best_single = min(singles.values())
+        rows.append(row(
+            f"multicloud/customer{cust}/cross_vs_single", us,
+            n_datasets=n,
+            cross_cents=round(cross, 2),
+            **{f"single_{p}_cents": round(v, 2) for p, v in singles.items()},
+            best_single_cents=round(best_single, 2),
+            cross_vs_best_single_pct=round(100.0 * (1 - cross / best_single),
+                                           3),
+            never_costlier=bool(cross <= best_single + 1e-9),
+            provider_mix=plan.report.provider_scheme))
+
+        # finite per-provider capacities: group rows in the capacitated
+        # solver. Azure (the cheapest archive) is capped below its uncapped
+        # footprint so the constraint actually binds and mass spills over.
+        pa = table.provider_names.index("azure")
+        az_cap = 0.5 * float(
+            plan.stored_gb[table.provider_of_tier[plan.assignment.tier]
+                           == pa].sum())
+        capped = big3_table(azure_capacity_gb=az_cap)
+        prob_c = _problem(capped, cfg, n, lognorm, seed)
+        eng_c = PlacementEngine(capped, cfg)
+        plan_c, us_c = timed(lambda: eng_c.solve(prob_c), repeats=1)
+        stored = plan_c.stored_gb
+        pp = capped.provider_of_tier[plan_c.assignment.tier]
+        pa_c = capped.provider_names.index("azure")
+        rows.append(row(
+            f"multicloud/customer{cust}/provider_caps", us_c,
+            feasible=bool(plan_c.assignment.feasible),
+            capped_cents=round(plan_c.report.total_cents, 2),
+            uncapped_cents=round(cross, 2),
+            azure_used_gb=round(float(stored[pp == pa_c].sum()), 2),
+            azure_cap_gb=round(az_cap, 2),
+            total_stored_gb=round(float(stored.sum()), 2),
+            provider_mix=plan_c.report.provider_scheme))
+
+        # drift: re-optimization prices cross-provider egress; against a
+        # zero-egress counterfactual, count how many provider moves the
+        # egress wall suppresses and what the taken moves actually paid.
+        rng = np.random.default_rng(seed + 1)
+        new_rho = problem.rho.copy()
+        hot = rng.random(n) < 0.10
+        cold = ~hot & (rng.random(n) < 0.10)
+        new_rho[hot] *= rng.uniform(20.0, 100.0, int(hot.sum()))
+        new_rho[cold] /= rng.uniform(20.0, 100.0, int(cold.sum()))
+        mig, us_m = timed(lambda: eng.reoptimize(plan, new_rho,
+                                                 months_held=0.5), repeats=1)
+        crossed = int(((table.provider_of_tier[mig.new_tier]
+                        != table.provider_of_tier[mig.old_tier])
+                       & mig.moved).sum())
+        free = big3_table()
+        free = dataclasses.replace(
+            free, egress_cents_gb=np.zeros_like(free.egress_cents_gb))
+        prob_f = _problem(free, cfg, n, lognorm, seed)
+        eng_f = PlacementEngine(free, cfg)
+        mig_f = eng_f.reoptimize(eng_f.solve(prob_f), new_rho,
+                                 months_held=0.5)
+        crossed_f = int(((free.provider_of_tier[mig_f.new_tier]
+                          != free.provider_of_tier[mig_f.old_tier])
+                         & mig_f.moved).sum())
+        rows.append(row(
+            f"multicloud/customer{cust}/drift_reopt", us_m,
+            n_moved=mig.n_moved,
+            n_provider_moves=crossed,
+            n_provider_moves_if_egress_free=crossed_f,
+            migration_cents=round(mig.migration_cents, 4),
+            egress_cents=round(mig.egress_cents, 4),
+            penalty_cents=round(mig.penalty_cents, 4),
+            steady_cents=round(mig.plan.report.total_cents, 2)))
+    return emit(rows, "multicloud")
+
+
+if __name__ == "__main__":
+    run()

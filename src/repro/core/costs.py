@@ -11,7 +11,7 @@ of per-tier vectors, so AWS/GCP tables can be dropped in (paper §III footnote 2
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -90,6 +90,199 @@ def tpch_capacity_table(total_gb: float) -> CostTable:
     t = azure_table()
     frac = np.array([0.163, 0.326, 0.4891, np.inf])
     return t.with_capacity(frac * total_gb if np.isfinite(total_gb) else frac)
+
+
+# ------------------------------------------------------------- multi-cloud
+@dataclasses.dataclass(frozen=True)
+class ProviderCostTable:
+    """One provider's tier lattice plus its outbound data-transfer rate.
+
+    ``egress_out_cents_gb`` is the provider's internet/cross-cloud egress
+    price — what the *source* provider bills when bytes leave it for another
+    cloud. ``capacity_gb`` caps the provider's total footprint across all of
+    its tiers (np.inf = unbounded); it becomes a group constraint row in the
+    capacitated solver.
+    """
+
+    provider: str
+    table: CostTable
+    egress_out_cents_gb: float = 0.0
+    capacity_gb: float = np.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiCloudCostTable(CostTable):
+    """A flattened ``(provider, tier)`` placement space.
+
+    Concatenates P providers' tier vectors into one ``CostTable`` with
+    ``L = sum(L_p)`` flat tiers, so every consumer of the single-cloud model
+    (cost tensor, solvers, billing, store) works unchanged. The one semantic
+    extension is :meth:`tier_change_cents_gb`: moves whose source and
+    destination flat tiers belong to different providers additionally pay the
+    source provider's egress — the **off-diagonal blocks** of the Delta
+    matrix. With one provider and zero egress this class is bit-for-bit
+    equivalent to its underlying :class:`CostTable`.
+
+    Build instances with :func:`multi_cloud_table`, not directly.
+    """
+
+    provider_names: Tuple[str, ...] = ()
+    provider_of_tier: Optional[np.ndarray] = None    # (L,) int
+    egress_cents_gb: Optional[np.ndarray] = None     # (P,P), zero diagonal
+    provider_capacity_gb: Optional[np.ndarray] = None  # (P,)
+
+    @property
+    def num_providers(self) -> int:
+        return len(self.provider_names)
+
+    def provider_tiers(self, p: int) -> np.ndarray:
+        """Flat tier indices belonging to provider ``p``."""
+        return np.where(self.provider_of_tier == p)[0]
+
+    def tier_change_cents_gb(self) -> np.ndarray:
+        """Block-structured Delta: within-provider blocks are read+write as in
+        the base class; cross-provider blocks add ``egress[p(u), p(v)]``.
+        The ingestion row (new data, L(P) = -1) never pays egress."""
+        delta = super().tier_change_cents_gb()        # (L+1, L)
+        L = self.num_tiers
+        p = self.provider_of_tier
+        delta[:L] += self.egress_cents_gb[p[:, None], p[None, :]]
+        return delta
+
+
+def multi_cloud_table(providers: Sequence[ProviderCostTable],
+                      egress_cents_gb: Optional[np.ndarray] = None,
+                      ) -> MultiCloudCostTable:
+    """Flatten provider tier lattices into one ``(provider, tier)`` space.
+
+    ``egress_cents_gb`` overrides the (P,P) egress matrix; by default row i
+    is ``providers[i].egress_out_cents_gb`` everywhere off the diagonal
+    (cross-cloud transfer is billed by the source as internet egress). The
+    diagonal is always forced to zero — moving within a provider pays no
+    egress. ``compute_cents_sec`` is taken from the first provider (the
+    paper's C^c is a property of where decompression runs, not of storage).
+    """
+    if not providers:
+        raise ValueError("need at least one provider")
+    P = len(providers)
+    if egress_cents_gb is None:
+        out = np.array([p.egress_out_cents_gb for p in providers])
+        egress = np.repeat(out[:, None], P, axis=1)
+    else:
+        egress = np.array(egress_cents_gb, np.float64, copy=True)
+        if egress.shape != (P, P):
+            raise ValueError(f"egress matrix must be ({P},{P}), "
+                             f"got {egress.shape}")
+    np.fill_diagonal(egress, 0.0)
+    tabs = [p.table for p in providers]
+    cat = lambda attr: np.concatenate([getattr(t, attr) for t in tabs])
+    return MultiCloudCostTable(
+        storage_cents_gb_month=cat("storage_cents_gb_month"),
+        read_cents_gb=cat("read_cents_gb"),
+        write_cents_gb=cat("write_cents_gb"),
+        ttfb_seconds=cat("ttfb_seconds"),
+        capacity_gb=cat("capacity_gb"),
+        early_delete_months=cat("early_delete_months"),
+        compute_cents_sec=tabs[0].compute_cents_sec,
+        names=tuple(f"{p.provider}:{n}" for p in providers
+                    for n in p.table.names),
+        provider_names=tuple(p.provider for p in providers),
+        provider_of_tier=np.concatenate(
+            [np.full(t.num_tiers, i) for i, t in enumerate(tabs)]),
+        egress_cents_gb=egress,
+        provider_capacity_gb=np.array([p.capacity_gb for p in providers],
+                                      np.float64),
+    )
+
+
+def move_egress_cents_gb(table: CostTable,
+                         from_tier: "int | np.ndarray",
+                         to_tier: "int | np.ndarray") -> np.ndarray:
+    """Per-GB cross-provider egress for a tier move (broadcasts).
+
+    Zero for plain single-cloud tables, for new data (``from_tier == -1``),
+    and for moves within one provider.
+    """
+    f = np.asarray(from_tier, int)
+    t = np.asarray(to_tier, int)
+    p = getattr(table, "provider_of_tier", None)
+    if p is None:
+        return np.zeros(np.broadcast(f, t).shape)
+    safe_f, safe_t = np.maximum(f, 0), np.maximum(t, 0)
+    eg = table.egress_cents_gb[p[safe_f], p[safe_t]]
+    return np.where((f >= 0) & (t >= 0), eg, 0.0)
+
+
+def aws_s3_provider(capacity_gb: float = np.inf) -> ProviderCostTable:
+    """AWS S3, us-east-1 list prices (2024), normalized like the paper's
+    Table XII: request charges amortized per GB at 4 MB-per-op granularity,
+    retrieval fees folded into ``read_cents_gb``. Tiers: Standard /
+    Standard-IA / Glacier Instant Retrieval / Glacier Deep Archive."""
+    return ProviderCostTable(
+        provider="aws",
+        table=CostTable(
+            storage_cents_gb_month=np.array([2.3, 1.25, 0.4, 0.099]),
+            read_cents_gb=np.array([0.0103, 1.0, 3.0, 2.0]),
+            write_cents_gb=np.array([0.0128, 0.0256, 0.0512, 0.128]),
+            ttfb_seconds=np.array([0.02, 0.02, 0.05, 43200.0]),
+            capacity_gb=np.array([np.inf] * 4),
+            early_delete_months=np.array([0.0, 1.0, 3.0, 6.0]),
+            names=("standard", "standard_ia", "glacier_ir", "deep_archive"),
+        ),
+        egress_out_cents_gb=9.0,
+        capacity_gb=capacity_gb,
+    )
+
+
+def gcp_gcs_provider(capacity_gb: float = np.inf) -> ProviderCostTable:
+    """GCP Cloud Storage, regional us-central1 list prices (2024), same
+    normalization. All four GCS classes are online (millisecond TTFB) —
+    archival is priced, not slow. Tiers: Standard / Nearline / Coldline /
+    Archive."""
+    return ProviderCostTable(
+        provider="gcp",
+        table=CostTable(
+            storage_cents_gb_month=np.array([2.0, 1.0, 0.4, 0.12]),
+            read_cents_gb=np.array([0.0102, 1.0256, 2.0512, 5.128]),
+            write_cents_gb=np.array([0.0128, 0.0256, 0.0256, 0.128]),
+            ttfb_seconds=np.array([0.02, 0.02, 0.02, 0.05]),
+            capacity_gb=np.array([np.inf] * 4),
+            early_delete_months=np.array([0.0, 1.0, 3.0, 12.0]),
+            names=("standard", "nearline", "coldline", "archive"),
+        ),
+        egress_out_cents_gb=12.0,
+        capacity_gb=capacity_gb,
+    )
+
+
+def azure_blob_provider(capacity_gb: float = np.inf) -> ProviderCostTable:
+    """Azure Blob Storage, East US LRS flat-namespace list prices (2024),
+    same normalization. Distinct from :func:`azure_table`, which reproduces
+    the paper's ADLS Gen2 Tables I & XII. Tiers: Hot / Cool / Cold /
+    Archive (Archive TTFB is the documented up-to-15 h rehydration)."""
+    return ProviderCostTable(
+        provider="azure",
+        table=CostTable(
+            storage_cents_gb_month=np.array([1.84, 1.0, 0.36, 0.099]),
+            read_cents_gb=np.array([0.0111, 1.0256, 3.0768, 2.7184]),
+            write_cents_gb=np.array([0.0163, 0.0325, 0.0585, 0.0666]),
+            ttfb_seconds=np.array([0.02, 0.02, 0.02, 54000.0]),
+            capacity_gb=np.array([np.inf] * 4),
+            early_delete_months=np.array([0.0, 1.0, 3.0, 6.0]),
+            names=("hot", "cool", "cold", "archive"),
+        ),
+        egress_out_cents_gb=8.7,
+        capacity_gb=capacity_gb,
+    )
+
+
+def big3_table(aws_capacity_gb: float = np.inf,
+               gcp_capacity_gb: float = np.inf,
+               azure_capacity_gb: float = np.inf) -> MultiCloudCostTable:
+    """AWS + GCP + Azure flattened into one 12-tier placement space."""
+    return multi_cloud_table([aws_s3_provider(aws_capacity_gb),
+                              gcp_gcs_provider(gcp_capacity_gb),
+                              azure_blob_provider(azure_capacity_gb)])
 
 
 @dataclasses.dataclass(frozen=True)

@@ -31,7 +31,8 @@ import numpy as np
 from repro.core import datapart
 from repro.core.stream import QueryFamilies, StreamingPartitioner
 from repro.core.costs import (CostTable, Weights, cost_tensor,
-                              early_delete_penalty_gb, latency_feasible)
+                              early_delete_penalty_gb, latency_feasible,
+                              move_egress_cents_gb)
 from repro.core.optassign import (Assignment, capacitated_assign,
                                   greedy_assign, lock_schemes)
 from repro.data.tables import Table
@@ -50,6 +51,8 @@ class ScopeConfig:
     capacity_gb: Optional[np.ndarray] = None  # None = unbounded (greedy path)
     latency_sla_sec: float = np.inf
     tier_whitelist: Optional[Sequence[int]] = None  # e.g. (0,1,2) = no archive
+    provider_whitelist: Optional[Sequence[str]] = None  # multi-cloud tables:
+    # restrict placement to these providers' flat tiers (None = all)
     s_thresh_mult: float = 3.0               # G-PART span cap, x median family span
     rho_c: float = 4.0
     rho_c_abs: float = 10.0
@@ -72,6 +75,8 @@ class PipelineReport:
     spans_gb: np.ndarray
     rho: np.ndarray
     schemes: Sequence[str]
+    provider_scheme: Optional[List[int]] = None  # partitions per provider
+    # (multi-cloud tables only; None for single-cloud)
 
 
 @dataclasses.dataclass
@@ -133,8 +138,10 @@ class MigrationPlan:
     new_tier: np.ndarray
     old_scheme: np.ndarray
     new_scheme: np.ndarray
-    migration_cents: float            # read-out + write-in transfer cost
+    migration_cents: float            # read-out + egress + write-in transfer
     penalty_cents: float              # early-deletion charges
+    egress_cents: float = 0.0         # cross-provider egress component of
+    # migration_cents (already included there; broken out for visibility)
 
     @property
     def n_moved(self) -> int:
@@ -266,6 +273,17 @@ class AssignStage:
             allowed = np.zeros(table.num_tiers, bool)
             allowed[list(cfg.tier_whitelist)] = True
             feas &= allowed[None, :, None]
+        if cfg.provider_whitelist is not None:
+            pnames = getattr(table, "provider_names", None)
+            if pnames is None:
+                raise ValueError("provider_whitelist requires a "
+                                 "MultiCloudCostTable")
+            unknown = set(cfg.provider_whitelist) - set(pnames)
+            if unknown:
+                raise ValueError(f"unknown providers {sorted(unknown)}; "
+                                 f"table has {pnames}")
+            wanted = np.array([p in cfg.provider_whitelist for p in pnames])
+            feas &= wanted[table.provider_of_tier][None, :, None]
         if not cfg.use_tiering:
             fixed = cfg.fixed_tier if cfg.fixed_tier is not None else 0
             only = np.zeros(table.num_tiers, bool)
@@ -280,10 +298,19 @@ class AssignStage:
                  locked_scheme: Optional[np.ndarray] = None) -> Assignment:
         cost, feas = self.cost_and_feasibility(problem, extra_cost,
                                                locked_scheme)
-        if self.cfg.capacity_gb is None:
+        # Multi-cloud tables carry per-provider capacity totals; finite ones
+        # become group constraint rows in the capacitated solver.
+        gcap = getattr(self.table, "provider_capacity_gb", None)
+        has_gcap = gcap is not None and bool(np.isfinite(gcap).any())
+        if self.cfg.capacity_gb is None and not has_gcap:
             return greedy_assign(cost, feas)
-        return capacitated_assign(cost, feas, problem.stored_matrix(),
-                                  self.cfg.capacity_gb)
+        cap = (np.asarray(self.cfg.capacity_gb, np.float64)
+               if self.cfg.capacity_gb is not None
+               else np.full(self.table.num_tiers, np.inf))
+        return capacitated_assign(
+            cost, feas, problem.stored_matrix(), cap,
+            tier_groups=self.table.provider_of_tier if has_gcap else None,
+            group_capacity_gb=gcap if has_gcap else None)
 
 
 class BillingStage:
@@ -310,6 +337,12 @@ class BillingStage:
         ttfb_acc = float((rho * t.ttfb_seconds[l]).sum())
         dlat_acc = float((rho * d_sec).sum())
         counts = np.bincount(l[l >= 0], minlength=t.num_tiers)
+        prov = getattr(t, "provider_of_tier", None)
+        provider_scheme = None
+        if prov is not None:
+            pc = np.bincount(np.asarray(prov, int)[l[l >= 0]],
+                             minlength=len(t.provider_names))
+            provider_scheme = [int(c) for c in pc]
         return PipelineReport(
             storage_cents=storage, decomp_cents=decomp, read_cents=read,
             total_cents=storage + decomp + read,
@@ -317,7 +350,8 @@ class BillingStage:
             decomp_latency_ms=1e3 * dlat_acc / max(rho_tot, 1e-12),
             tiering_scheme=[int(c) for c in counts],
             n_partitions=problem.n, assignment=assignment,
-            spans_gb=problem.spans_gb, rho=rho, schemes=problem.schemes)
+            spans_gb=problem.spans_gb, rho=rho, schemes=problem.schemes,
+            provider_scheme=provider_scheme)
 
 
 # ------------------------------------------------------------------ engine
@@ -415,6 +449,18 @@ class PlacementEngine:
         extra = extra + self.cfg.weights.gamma * np.where(
             same_tier_new_scheme, recompress, 0.0)
 
+        # Cross-provider egress rides Delta in the cost tensor, which prices
+        # it on the destination-compressed bytes (spans/R[k]); the bill (and
+        # the store) charges it on the OLD stored payload — the bytes that
+        # actually leave the provider. Re-base the objective so scheme
+        # changes can't under/over-price the egress wall.
+        if getattr(table, "provider_of_tier", None) is not None:
+            eg_nl = move_egress_cents_gb(table, cur_l[:, None],
+                                         np.arange(L)[None, :])      # (N, L)
+            extra = extra + self.cfg.weights.gamma * (
+                eg_nl[:, :, None]
+                * (old_stored[:, None, None] - new_stored_nk[:, None, :]))
+
         assignment = self.assign(problem2, extra_cost=extra,
                                  locked_scheme=locked)
         report = self.billing(problem2, assignment)
@@ -424,10 +470,15 @@ class PlacementEngine:
         new_k = assignment.scheme.astype(int)
         moved = (cur_l >= 0) & ((new_l != cur_l) | (new_k != cur_k))
         new_stored = new_plan.stored_gb
-        # Transfer: read the old payload out of its tier; write the (possibly
-        # re-compressed) payload into the destination tier.
+        # Transfer: read the old payload out of its tier; if the destination
+        # tier belongs to a different provider, the old payload additionally
+        # pays the source provider's egress (charged exactly once, on the
+        # bytes that actually cross the provider boundary); then write the
+        # (possibly re-compressed) payload into the destination tier.
         write_gb = np.where(new_k == cur_k, old_stored, new_stored)
-        migration = float(np.where(
+        egress_gb = move_egress_cents_gb(table, cur_l, new_l)    # (N,)
+        egress = float(np.where(moved, old_stored * egress_gb, 0.0).sum())
+        migration = egress + float(np.where(
             moved,
             old_stored * table.read_cents_gb[safe_l]
             + write_gb * table.write_cents_gb[new_l], 0.0).sum())
@@ -435,7 +486,8 @@ class PlacementEngine:
         return MigrationPlan(
             plan=new_plan, moved=moved, old_tier=cur_l, new_tier=new_l,
             old_scheme=cur_k, new_scheme=new_k,
-            migration_cents=migration, penalty_cents=penalty)
+            migration_cents=migration, penalty_cents=penalty,
+            egress_cents=egress)
 
 
 # --------------------------------------------------------------- streaming
@@ -488,6 +540,7 @@ class StreamStepReport:
     migration_cents: float
     penalty_cents: float
     steady_cents: float               # steady-state bill of the new plan
+    egress_cents: float = 0.0         # cross-provider egress paid this step
 
 
 @dataclasses.dataclass
@@ -666,5 +719,6 @@ class StreamingEngine:
             n_new=int((cur_l < 0).sum()), n_moved=mig.n_moved,
             compacted=compacted, migration_cents=mig.migration_cents,
             penalty_cents=mig.penalty_cents,
-            steady_cents=mig.plan.report.total_cents))
+            steady_cents=mig.plan.report.total_cents,
+            egress_cents=mig.egress_cents))
         return mig

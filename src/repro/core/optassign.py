@@ -180,66 +180,115 @@ def _chosen_usage(stored_gb: np.ndarray, tier: np.ndarray,
     return use
 
 
+def _constraint_rows(capacity_gb: np.ndarray,
+                     tier_groups: Optional[np.ndarray],
+                     group_capacity_gb: Optional[np.ndarray],
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Capacity constraints as a membership matrix ``A`` (C, L) + caps (C,).
+
+    Rows 0..L-1 are the per-tier capacities (identity); optional group rows
+    (e.g. per-provider totals over a block of flat tiers in the multi-cloud
+    placement space) follow. A constraint is ``A[c] @ use <= cap_all[c]``.
+    """
+    if (tier_groups is None) != (group_capacity_gb is None):
+        raise ValueError("tier_groups and group_capacity_gb must be "
+                         "passed together")
+    L = capacity_gb.shape[0]
+    A = np.eye(L, dtype=bool)
+    cap_all = np.asarray(capacity_gb, np.float64)
+    if tier_groups is not None:
+        g = np.asarray(tier_groups, int)
+        gcap = np.asarray(group_capacity_gb, np.float64)
+        G = gcap.shape[0]
+        if g.min() < 0 or g.max() >= G:
+            raise ValueError(f"tier_groups ids must lie in [0, {G}) to "
+                             f"match group_capacity_gb")
+        A = np.concatenate([A, np.arange(G)[:, None] == g[None, :]], 0)
+        cap_all = np.concatenate([cap_all, gcap])
+    return A, cap_all
+
+
 @partial(jax.jit, static_argnames=("iters",))
 def _lagrangian_scan(masked: jnp.ndarray, stored: jnp.ndarray,
                      cap: jnp.ndarray, finite_cap: jnp.ndarray,
+                     group_of_tier: jnp.ndarray, gcap: jnp.ndarray,
+                     finite_gcap: jnp.ndarray,
                      step0: jnp.ndarray, iters: int):
-    """Jitted dual ascent over all N*L*K cells; one candidate per step."""
+    """Jitted dual ascent over all N*L*K cells; one candidate per step.
+
+    Dualizes both the per-tier capacities and the group (per-provider)
+    capacities: a tier's effective multiplier is its own lambda plus its
+    group's. With no groups the group lambdas stay exactly zero.
+    """
     N, L, K = masked.shape
+    G = gcap.shape[0]
     flat_cost = masked.reshape(N, -1)
     flat_stored = stored.reshape(N, -1)
 
     def body(lam, it):
-        adj = flat_cost + (lam[None, :, None] * stored).reshape(N, -1)
+        eff = lam[:L] + lam[L:][group_of_tier]
+        adj = flat_cost + (eff[None, :, None] * stored).reshape(N, -1)
         idx = jnp.argmin(adj, axis=1)
         chosen = jnp.take_along_axis(flat_stored, idx[:, None], axis=1)[:, 0]
         use = jnp.zeros(L, masked.dtype).at[idx // K].add(chosen)
-        grad = jnp.where(finite_cap, use - cap, 0.0)
+        use_g = jnp.zeros(G, masked.dtype).at[group_of_tier].add(use)
+        grad = jnp.concatenate([jnp.where(finite_cap, use - cap, 0.0),
+                                jnp.where(finite_gcap, use_g - gcap, 0.0)])
         lam = jnp.maximum(0.0, lam + step0 / (1.0 + it) * grad)
         return lam, idx
 
-    _, cells = jax.lax.scan(body, jnp.zeros(L, masked.dtype),
+    _, cells = jax.lax.scan(body, jnp.zeros(L + G, masked.dtype),
                             jnp.arange(iters, dtype=masked.dtype))
     return cells                                    # (iters, N) flat indices
 
 
 def _repair_vec(tier: np.ndarray, scheme: np.ndarray, masked: np.ndarray,
-                stored: np.ndarray, cap: np.ndarray,
-                finite_cap: np.ndarray) -> Optional[np.ndarray]:
+                stored: np.ndarray, A: np.ndarray, cap_all: np.ndarray,
+                finite_all: np.ndarray) -> Optional[np.ndarray]:
     """Argsort-based greedy repair: evict cheapest-delta members of the most
-    over-capacity tier until every finite capacity is respected."""
+    over-capacity constraint (a tier, or a group such as a provider) until
+    every finite capacity is respected."""
     N, L, K = masked.shape
     use = _chosen_usage(stored, tier, scheme)
+    Af = A & finite_all[:, None]                    # (C, L)
     for _ in range(4 * N + 8):
-        over = np.where(finite_cap & (use > cap + 1e-9))[0]
+        use_c = A @ use
+        over = np.where(finite_all & (use_c > cap_all + 1e-9))[0]
         if over.size == 0:
             return use
-        l = over[np.argmax(use[over] - cap[over])]
-        members = np.where(tier == l)[0]
+        c = over[np.argmax((use_c - cap_all)[over])]
+        in_c = A[c]                                 # (L,) tiers in constraint
+        members = np.where(in_c[tier])[0]
         if members.size == 0:
             return None
-        cur = masked[members, l, scheme[members]]
-        room = np.where(finite_cap, cap - use, np.inf)
+        cur = masked[members, tier[members], scheme[members]]
+        # per-tier room = tightest finite constraint containing that tier
+        slack_c = np.where(finite_all, cap_all - use_c, np.inf)
+        room = np.where(Af, slack_c[:, None], np.inf).min(0)         # (L,)
         ok = (masked[members] < BIG) & (stored[members]
                                         <= room[None, :, None] + 1e-9)
-        ok[:, l, :] = False
+        ok[:, in_c, :] = False                      # must leave the constraint
         delta = np.where(ok, masked[members] - cur[:, None, None],
                          np.inf).reshape(members.size, -1)
         best_cell = delta.argmin(1)
         best_delta = delta[np.arange(members.size), best_cell]
         moved = False
         for m in np.argsort(best_delta):
-            if use[l] <= cap[l] + 1e-9:
+            if use_c[c] <= cap_all[c] + 1e-9:
                 break
             if not np.isfinite(best_delta[m]):
                 break
             l2, k2 = divmod(int(best_cell[m]), K)
             n = int(members[m])
-            room2 = cap[l2] - use[l2] if finite_cap[l2] else np.inf
+            room2 = np.where(Af[:, l2], cap_all - use_c, np.inf).min() \
+                if Af[:, l2].any() else np.inf
             if stored[n, l2, k2] > room2 + 1e-9:
                 continue             # room shrank this batch; retry next round
-            use[l] -= stored[n, l, scheme[n]]
-            use[l2] += stored[n, l2, k2]
+            l1 = tier[n]
+            s1, s2 = stored[n, l1, scheme[n]], stored[n, l2, k2]
+            use[l1] -= s1
+            use[l2] += s2
+            use_c += A[:, l2] * s2 - A[:, l1] * s1
             tier[n], scheme[n] = l2, k2
             moved = True
         if not moved:
@@ -248,18 +297,27 @@ def _repair_vec(tier: np.ndarray, scheme: np.ndarray, masked: np.ndarray,
 
 
 def _local_search_vec(tier: np.ndarray, scheme: np.ndarray, use: np.ndarray,
-                      masked: np.ndarray, stored: np.ndarray, cap: np.ndarray,
-                      finite_cap: np.ndarray) -> None:
+                      masked: np.ndarray, stored: np.ndarray, A: np.ndarray,
+                      cap_all: np.ndarray, finite_all: np.ndarray) -> None:
     """Best-improvement 1-swap descent with a full (N,L,K) delta matrix."""
     N, L, K = masked.shape
     n_idx = np.arange(N)
+    Af = A & finite_all[:, None]                    # (C, L)
+    any_finite = bool(finite_all.any())
     for _ in range(8 * N + 64):
         cur = masked[n_idx, tier, scheme]
         stored_cur = stored[n_idx, tier, scheme]
-        same = (np.arange(L)[None, :] == tier[:, None])[:, :, None]  # (N,L,1)
-        eff = use[None, :, None] + stored - same * stored_cur[:, None, None]
-        ok = (masked < BIG) & (~finite_cap[None, :, None]
-                               | (eff <= cap[None, :, None] + 1e-9))
+        if any_finite:
+            use_c = A @ use
+            # slack[n, c]: room left in constraint c once n vacates its cell
+            slack = ((cap_all - use_c)[None, :]
+                     + A[:, tier].T * stored_cur[:, None])           # (N, C)
+            # per-destination room = tightest finite constraint containing it
+            room = np.where(Af[None, :, :], slack[:, :, None],
+                            np.inf).min(1)                           # (N, L)
+            ok = (masked < BIG) & (stored <= room[:, :, None] + 1e-9)
+        else:
+            ok = masked < BIG
         delta = np.where(ok, masked - cur[:, None, None], np.inf)
         j = int(delta.argmin())
         n, rem = divmod(j, L * K)
@@ -279,6 +337,8 @@ def capacitated_assign(
     iters: int = 200,
     seed: int = 0,
     max_candidates: int = 16,
+    tier_groups: Optional[np.ndarray] = None,       # (L,) group id per tier
+    group_capacity_gb: Optional[np.ndarray] = None,  # (G,)
 ) -> Assignment:
     """Vectorized capacitated OPTASSIGN.
 
@@ -287,29 +347,44 @@ def capacitated_assign(
     and polished (delta-matrix 1-swap descent) in vectorized NumPy, scoring in
     f64. Matches :func:`brute_force` on tiny instances and is orders of
     magnitude faster than :func:`capacitated_assign_ref` at N >= 1000.
+
+    ``tier_groups``/``group_capacity_gb`` add group capacity constraints on
+    top of the per-tier ones: ``sum(use[tier_groups == g]) <= group_cap[g]``.
+    This is how per-provider capacity rows of the flattened multi-cloud
+    ``(provider, tier)`` space enter the solver — each group is one
+    provider's block of flat tiers.
     """
     N, L, K = cost.shape
     masked = _masked(np.asarray(cost, np.float64), feasible)
     stored = np.asarray(stored_gb, np.float64)
     cap = np.asarray(capacity_gb, np.float64)
     finite_cap = np.isfinite(cap)
+    A, cap_all = _constraint_rows(cap, tier_groups, group_capacity_gb)
+    finite_all = np.isfinite(cap_all)
 
     # lam=0 greedy = the unconstrained optimum; if it fits the capacities it
     # is optimal outright and the dual ascent can be skipped entirely.
     cell0 = masked.reshape(N, -1).argmin(1)
     tier0, scheme0 = cell0 // K, cell0 % K
     use0 = _chosen_usage(stored, tier0, scheme0)
-    if (~finite_cap | (use0 <= cap + 1e-9)).all():
+    if (~finite_all | (A @ use0 <= cap_all + 1e-9)).all():
         total = float(masked[np.arange(N), tier0, scheme0].sum())
         ok = bool(total < BIG)
         return Assignment(tier0, scheme0, total if ok else float("inf"), ok)
 
     finite_cells = masked[masked < BIG]
-    step0 = (finite_cells.mean() / max(cap[finite_cap].mean(), 1e-9)
-             if finite_cap.any() and finite_cells.size else 0.0)
+    step0 = (finite_cells.mean() / max(cap_all[finite_all].mean(), 1e-9)
+             if finite_all.any() and finite_cells.size else 0.0)
+    if tier_groups is None:
+        g_of_t = np.zeros(L, np.int32)
+        gcap = np.array([np.inf])
+    else:
+        g_of_t = np.asarray(tier_groups, np.int32)
+        gcap = np.asarray(group_capacity_gb, np.float64)
     cells = np.asarray(_lagrangian_scan(
         jnp.asarray(masked), jnp.asarray(stored), jnp.asarray(cap),
-        jnp.asarray(finite_cap), jnp.float32(step0), iters))
+        jnp.asarray(finite_cap), jnp.asarray(g_of_t), jnp.asarray(gcap),
+        jnp.asarray(np.isfinite(gcap)), jnp.float32(step0), iters))
 
     uniq, seen = [], set()
     for row_ in cells:
@@ -327,10 +402,12 @@ def capacitated_assign(
         tier, scheme = cand // K, cand % K
         if fallback is None:
             fallback = (tier.copy(), scheme.copy())
-        use = _repair_vec(tier, scheme, masked, stored, cap, finite_cap)
+        use = _repair_vec(tier, scheme, masked, stored, A, cap_all,
+                          finite_all)
         if use is None:
             continue
-        _local_search_vec(tier, scheme, use, masked, stored, cap, finite_cap)
+        _local_search_vec(tier, scheme, use, masked, stored, A, cap_all,
+                          finite_all)
         total = float(masked[np.arange(N), tier, scheme].sum())
         if total < BIG and (best is None or total < best.cost):
             best = Assignment(tier.copy(), scheme.copy(), total, True)
@@ -438,20 +515,32 @@ def capacitated_assign_ref(
 # ---------------------------------------------------------------- brute force
 def brute_force(cost: np.ndarray, feasible: np.ndarray,
                 stored_gb: Optional[np.ndarray] = None,
-                capacity_gb: Optional[np.ndarray] = None) -> Assignment:
+                capacity_gb: Optional[np.ndarray] = None,
+                tier_groups: Optional[np.ndarray] = None,
+                group_capacity_gb: Optional[np.ndarray] = None) -> Assignment:
     """Exact oracle by enumeration — only for tiny test instances."""
+    if (tier_groups is None) != (group_capacity_gb is None):
+        raise ValueError("tier_groups and group_capacity_gb must be "
+                         "passed together")
     N, L, K = cost.shape
     masked = _masked(cost, feasible)
     cells = [[(l, k) for l in range(L) for k in range(K)
               if masked[n, l, k] < BIG] for n in range(N)]
     best_cost, best_pick = float("inf"), None
     for pick in itertools.product(*cells):
-        if capacity_gb is not None:
+        if capacity_gb is not None or group_capacity_gb is not None:
             use = np.zeros(L)
             for n, (l, k) in enumerate(pick):
                 use[l] += stored_gb[n, l, k]
-            if np.any(use > capacity_gb + 1e-9):
+            if capacity_gb is not None and np.any(use > capacity_gb + 1e-9):
                 continue
+            if group_capacity_gb is not None:
+                g = np.asarray(tier_groups, int)
+                gcap = np.asarray(group_capacity_gb, np.float64)
+                use_g = np.zeros(gcap.shape[0])
+                np.add.at(use_g, g, use)
+                if np.any(use_g > gcap + 1e-9):
+                    continue
         c = sum(masked[n, l, k] for n, (l, k) in enumerate(pick))
         if c < best_cost:
             best_cost, best_pick = c, pick

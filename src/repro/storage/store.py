@@ -16,7 +16,7 @@ import threading
 import time
 from typing import Dict, Iterable, Optional
 
-from repro.core.costs import CostTable, azure_table
+from repro.core.costs import CostTable, azure_table, move_egress_cents_gb
 from repro.storage.codecs import Codec, codec_by_name
 
 
@@ -29,6 +29,7 @@ class BillingMeter:
     write_cents: float = 0.0
     compute_cents: float = 0.0      # decompression compute
     penalty_cents: float = 0.0      # early-deletion charges
+    egress_cents: float = 0.0       # cross-provider transfer (multi-cloud)
     ttfb_seconds: float = 0.0       # accumulated simulated read latency
     decomp_seconds: float = 0.0
     n_reads: int = 0
@@ -37,7 +38,7 @@ class BillingMeter:
     @property
     def total_cents(self) -> float:
         return (self.storage_cents + self.read_cents + self.write_cents
-                + self.compute_cents + self.penalty_cents)
+                + self.compute_cents + self.penalty_cents + self.egress_cents)
 
     def as_dict(self) -> Dict[str, float]:
         return dataclasses.asdict(self) | {"total_cents": self.total_cents}
@@ -113,8 +114,14 @@ class TieredStore:
             self.meter.compute_cents += dt * self.table.compute_cents_sec
         return raw
 
+    def _egress_cents_gb(self, old_tier: int, new_tier: int) -> float:
+        """Per-GB cross-provider egress for a move; 0 on single-cloud tables."""
+        return float(move_egress_cents_gb(self.table, old_tier, new_tier))
+
     def change_tier(self, key: str, new_tier: int) -> None:
-        """Tier change = read from old + write to new (+ early-delete penalty)."""
+        """Tier change = read from old + write to new (+ early-delete penalty;
+        + the source provider's egress when the flat tiers of a multi-cloud
+        table belong to different providers)."""
         o = self._objs[key]
         if new_tier == o.tier:
             return
@@ -128,6 +135,8 @@ class TieredStore:
                     * (min_stay - held))
             self.meter.read_cents += o.stored_gb * self.table.read_cents_gb[o.tier]
             self.meter.write_cents += o.stored_gb * self.table.write_cents_gb[new_tier]
+            self.meter.egress_cents += (
+                o.stored_gb * self._egress_cents_gb(o.tier, new_tier))
             o.tier = new_tier
             o.moved_month = self._month
 
@@ -180,10 +189,17 @@ class TieredStore:
         for n in moved_idx:
             key = keys[n] if keys is not None else self._plan_key(n)
             if migration.new_scheme[n] != migration.old_scheme[n]:
+                old = self._objs[key]
+                old_tier, old_stored = old.tier, old.stored_gb
                 raw = self.get(key)
                 self.delete(key)
                 self.put(key, raw, int(migration.new_tier[n]),
                          schemes[int(migration.new_scheme[n])])
+                # the old payload crossed the provider boundary exactly once
+                with self._lock:
+                    self.meter.egress_cents += old_stored * \
+                        self._egress_cents_gb(old_tier,
+                                              int(migration.new_tier[n]))
             else:
                 self.change_tier(key, int(migration.new_tier[n]))
         return len(moved_idx)
@@ -244,9 +260,13 @@ class TieredStore:
                 self.put(key, payloads[n], tier, codec)
                 stats["put"] += 1
             elif o.codec != codec:
+                old_tier, old_stored = o.tier, o.stored_gb
                 raw = self.get(key)
                 self.delete(key)
                 self.put(key, raw, tier, codec)
+                with self._lock:
+                    self.meter.egress_cents += old_stored * \
+                        self._egress_cents_gb(old_tier, tier)
                 stats["reencoded"] += 1
             elif o.tier != tier:
                 self.change_tier(key, tier)

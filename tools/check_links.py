@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Markdown link checker — no third-party deps, used by the CI docs job.
+
+Checks every inline link/image target in the given markdown files (or all
+``*.md`` under given directories):
+
+ * relative paths must exist on disk (anchors are stripped; a bare
+   ``#anchor`` self-link is checked against the file's own headings);
+ * ``http(s)``/``mailto`` targets are recorded but not fetched (CI must not
+   depend on external availability).
+
+    python tools/check_links.py README.md docs
+
+Exits 1 with a per-link report if anything is broken.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _anchor_of(heading: str) -> str:
+    """GitHub-style slug: lowercase, drop punctuation, spaces to dashes."""
+    slug = re.sub(r"[^\w\- ]", "", heading.strip().lower())
+    return re.sub(r" +", "-", slug)
+
+
+def check_file(path: pathlib.Path) -> List[str]:
+    text = CODE_FENCE_RE.sub("", path.read_text())
+    anchors = {_anchor_of(h) for h in HEADING_RE.findall(text)}
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in anchors:
+                errors.append(f"{path}: missing anchor {target}")
+            continue
+        rel, _, _anchor = target.partition("#")
+        if not (path.parent / rel).exists():
+            errors.append(f"{path}: broken link {target}")
+    return errors
+
+
+def check(paths: List[str]) -> List[str]:
+    files: List[pathlib.Path] = []
+    for p in paths:
+        pp = pathlib.Path(p)
+        files.extend(sorted(pp.rglob("*.md")) if pp.is_dir() else [pp])
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        errors.extend(check_file(f))
+    return errors
+
+
+def main() -> int:
+    targets = sys.argv[1:] or ["README.md", "docs"]
+    errors = check(targets)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = len(errors)
+    print(f"check_links: {'OK' if not n else f'{n} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

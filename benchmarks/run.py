@@ -18,6 +18,7 @@ MODULES = [
     ("tablesIX-XI", "benchmarks.bench_scope_pipeline"),
     ("reopt", "benchmarks.bench_reoptimize"),
     ("stream", "benchmarks.bench_stream"),
+    ("daemon", "benchmarks.bench_daemon"),
     ("multicloud", "benchmarks.bench_multicloud"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),

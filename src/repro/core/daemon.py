@@ -1,0 +1,332 @@
+"""Continuous re-optimization daemon — budget-capped online migration.
+
+The paper's optimizer is only as good as its online loop: access rates
+drift, and the minimum-stay / tier-change machinery exists precisely so
+re-optimization can run continuously without churning storage.
+:class:`ReoptimizationDaemon` closes that loop. Each cycle it
+
+1. observes new access rates (batch mode: an (N,) rho vector; streaming
+   mode: a query-family batch folded in by the
+   :class:`~repro.core.engine.StreamingEngine`), optionally replaced by a
+   **forecast** (``forecast_fn`` — e.g. a linear trend over the recent
+   rho history, or an ``access_predict``-style fitted model),
+2. solves the migration problem with the full hysteresis stack — the
+   ``rho_rel_tol`` scheme lock plus the ``rho_abs_tol`` absolute floor
+   (:func:`~repro.core.engine.drift_gate`), early-delete penalties priced
+   on per-partition residency clocks,
+3. **selects** which candidate moves to execute under a per-cycle
+   :class:`MigrationBudget` (cents and/or GB) via the savings-per-
+   migration-cent knapsack (:func:`~repro.core.optassign.budgeted_moves`).
+   Unselected moves are deferred, tracked, and re-scored next cycle with
+   a priority-aging boost so long-postponed moves eventually win; moves
+   whose early-delete penalty still exceeds their projected steady-state
+   savings are postponed outright (min-stay-aware deferral),
+4. applies the partial :class:`~repro.core.engine.MigrationPlan` — to the
+   engine state, and to an attached :class:`~repro.storage.store.
+   TieredStore` (``migrate`` in batch mode, ``sync_plan`` in streaming
+   mode) with exact metering.
+
+With an infinite budget and ``rho_abs_tol=0`` every cycle is bit-identical
+to a plain ``reoptimize`` / ``ingest_and_reoptimize`` call — the daemon
+adds control, never drift (pinned by ``tests/test_daemon.py`` parity
+tests). Budget selection only ever *postpones* spend: deferral bookkeeping
+keeps charge-once semantics, so cumulative cost converges to the
+unbudgeted trajectory (``benchmarks/bench_daemon.py``).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from repro.core.engine import (MigrationPlan, PlacementEngine, PlacementPlan,
+                               StreamingEngine, drift_gate)
+from repro.core.optassign import budgeted_moves
+from repro.core.stream import occurrence_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationBudget:
+    """Per-cycle caps on one-off migration spend.
+
+    ``cents_per_cycle`` bounds the cycle's transfer + egress + early-delete
+    penalty cents; ``gb_per_cycle`` bounds the stored bytes leaving their
+    current cell. ``np.inf`` (the default) disables a cap.
+    """
+
+    cents_per_cycle: float = np.inf
+    gb_per_cycle: float = np.inf
+
+    @property
+    def finite(self) -> bool:
+        return bool(np.isfinite(self.cents_per_cycle)
+                    or np.isfinite(self.gb_per_cycle))
+
+
+@dataclasses.dataclass
+class DaemonCycleReport:
+    """What one daemon cycle observed, selected, deferred, and paid.
+
+    ``migration_cents`` here is the read-out + write-in transfer
+    **excluding** egress (unlike ``MigrationPlan.migration_cents``, which
+    folds egress in), so ``migration_cents + egress_cents + penalty_cents
+    == spent_cents`` — the exact budget charge, guaranteed <= the cap.
+    """
+
+    cycle: int
+    n_partitions: int
+    n_candidates: int                 # moves the solver proposed
+    n_selected: int                   # moves executed this cycle
+    n_deferred: int                   # moves postponed by the budget
+    migration_cents: float            # transfer (read+write), egress excluded
+    egress_cents: float
+    penalty_cents: float
+    spent_cents: float                # migration + egress + penalty
+    moved_gb: float                   # stored bytes that left their cell
+    steady_cents: float               # steady-state bill of the cycle's plan
+    max_deferral_age: int             # oldest pending deferral, in cycles
+
+
+def linear_trend_forecast(history: Sequence, horizon: float = 1.0,
+                          clip_min: float = 0.0) -> np.ndarray:
+    """Least-squares linear trend over a rho history, extrapolated
+    ``horizon`` cycles ahead (clamped non-negative).
+
+    ``history`` is a sequence of per-cycle observations — scalars in
+    streaming mode (one partition's rho per cycle), (N,) vectors in batch
+    mode. The default ``forecast_fn`` building block; swap in an
+    ``access_predict``-style fitted model for feature-driven projection.
+    """
+    h = np.asarray(history, np.float64)
+    T = h.shape[0]
+    if T < 2:
+        return h[-1]
+    t = np.arange(T, dtype=np.float64)
+    tm = t.mean()
+    ctr = (t - tm).reshape((T,) + (1,) * (h.ndim - 1))
+    slope = (ctr * (h - h.mean(0))).sum(0) / (ctr * ctr).sum()
+    return np.maximum(h[-1] + horizon * slope, clip_min)
+
+
+class ReoptimizationDaemon:
+    """Drives ``reoptimize`` / ``ingest_and_reoptimize`` in a cycle loop
+    with budget-capped, hysteresis-guarded migrations.
+
+    Two modes, chosen by the engine handed in:
+
+    * **batch** — ``ReoptimizationDaemon(placement_engine, plan=plan0)``;
+      each :meth:`step` takes the cycle's observed (N,) rho vector. The
+      daemon owns per-partition residency clocks (``months_held``) and
+      deferral ages.
+    * **streaming** — ``ReoptimizationDaemon(streaming_engine)``; each
+      :meth:`step` takes a query-family batch. Hysteresis tolerances come
+      from the streaming engine itself (``rho_rel_tol`` / ``rho_abs_tol``
+      constructor args); deferral ages are keyed by partition file-set
+      identity so they survive re-partitioning.
+
+    ``budget=None`` (or an all-inf :class:`MigrationBudget`) reproduces the
+    underlying engine's results bit-for-bit. ``store=`` mirrors every
+    applied (partial) plan into a metered ``TieredStore``: batch mode calls
+    ``store.migrate`` (the store must already hold the initial plan via
+    ``apply_plan``; pass ``store_keys`` if you used custom keys), streaming
+    mode calls ``store.sync_plan`` with payloads from ``payload_fn``.
+    """
+
+    def __init__(self, engine: "PlacementEngine | StreamingEngine",
+                 plan: Optional[PlacementPlan] = None, *,
+                 budget: Optional[MigrationBudget] = None,
+                 rho_rel_tol: Optional[float] = None,
+                 rho_abs_tol: Optional[float] = None,
+                 aging: float = 0.5,
+                 horizon_months: Optional[float] = None,
+                 min_stay_defer: bool = True,
+                 selection: str = "auto",
+                 forecast_fn: Optional[Callable] = None,
+                 forecast_window: int = 6,
+                 store=None, store_keys: Optional[list] = None,
+                 payload_fn: Optional[Callable] = None):
+        self.streaming = isinstance(engine, StreamingEngine)
+        self.engine = engine
+        self.budget = budget or MigrationBudget()
+        self.aging = float(aging)
+        self.horizon_months = horizon_months
+        self.min_stay_defer = min_stay_defer
+        self.selection = selection
+        self.forecast_fn = forecast_fn
+        self.forecast_window = int(forecast_window)
+        self.store = store
+        self.store_keys = store_keys
+        self.payload_fn = payload_fn
+        self.history: List[DaemonCycleReport] = []
+        if self.streaming:
+            if plan is not None:
+                raise ValueError("streaming mode derives its plan from the "
+                                 "engine; don't pass plan=")
+            if rho_rel_tol is not None or rho_abs_tol is not None:
+                raise ValueError("hysteresis lives on the StreamingEngine "
+                                 "in streaming mode — pass rho_rel_tol/"
+                                 "rho_abs_tol to its constructor instead")
+            self._ages: Dict[Tuple, int] = {}
+            self._rho_hist: Dict[Tuple, collections.deque] = {}
+        else:
+            if plan is None:
+                raise ValueError("batch mode needs the initial "
+                                 "PlacementPlan (plan=)")
+            self.plan: Optional[PlacementPlan] = plan
+            self.rho_rel_tol = 0.25 if rho_rel_tol is None else rho_rel_tol
+            self.rho_abs_tol = 0.0 if rho_abs_tol is None else rho_abs_tol
+            n = plan.problem.n
+            self._months_held = np.zeros(n)
+            self._age_arr = np.zeros(n, int)
+            # drift-lock base: the rate each scheme was CHOSEN under — kept
+            # for locked and deferred partitions (mirrors the streaming
+            # engine) so slow drift accumulates and deferred moves stay in
+            # the candidate set instead of re-basing away each cycle
+            self._rho_ref = np.asarray(plan.problem.rho, np.float64).copy()
+            self._batch_hist: collections.deque = collections.deque(
+                maxlen=self.forecast_window)
+
+    # ---------------------------------------------------------- selection
+    def _choose(self, mig: MigrationPlan, ages: np.ndarray) -> np.ndarray:
+        """Budget knapsack over the candidate moves (all-True when the
+        budget is unbounded — the parity fast path)."""
+        cand = mig.candidate
+        if not self.budget.finite or not cand.any():
+            return np.ones(cand.shape[0], bool)
+        savings = mig.steady_savings_cents(self.horizon_months)
+        charge = (mig.move_transfer_cents + mig.move_egress_cents
+                  + mig.move_penalty_cents)
+        eligible = cand.copy()
+        if self.min_stay_defer:
+            # postpone while the early-delete penalty still exceeds the
+            # projected steady-state savings — the clock only helps: the
+            # penalty prorates away while savings stay put
+            eligible &= ~(mig.move_penalty_cents
+                          > np.maximum(savings, 0.0) + 1e-12)
+        return budgeted_moves(
+            savings, charge, self.budget.cents_per_cycle,
+            candidates=eligible, move_gb=mig.old_stored_gb,
+            budget_gb=self.budget.gb_per_cycle,
+            priority=1.0 + self.aging * np.maximum(ages, 0),
+            method=self.selection)
+
+    @staticmethod
+    def _spent(mig: MigrationPlan) -> Tuple[float, float, float, float]:
+        transfer = float(np.where(mig.moved, mig.move_transfer_cents,
+                                  0.0).sum())
+        egress = float(np.where(mig.moved, mig.move_egress_cents, 0.0).sum())
+        penalty = float(np.where(mig.moved, mig.move_penalty_cents,
+                                 0.0).sum())
+        gb = float(np.where(mig.moved, mig.old_stored_gb, 0.0).sum())
+        return transfer, egress, penalty, gb
+
+    # ------------------------------------------------------------- cycles
+    def step(self, observed, months: float = 1.0) -> DaemonCycleReport:
+        """Run one cycle. ``observed`` is the (N,) rho vector (batch mode)
+        or the query-family batch (streaming mode); ``months`` is the
+        logical time elapsed since the previous cycle."""
+        if self.streaming:
+            return self._step_stream(observed, months)
+        return self._step_batch(np.asarray(observed, np.float64), months)
+
+    def run(self, cycles: Iterable, months: float = 1.0,
+            ) -> List[DaemonCycleReport]:
+        """Drive :meth:`step` over an iterable of per-cycle observations
+        (e.g. ``wl.stream_query_log(...)`` or a list of rho vectors)."""
+        return [self.step(obs, months=months) for obs in cycles]
+
+    # ---------------------------------------------------------- batch mode
+    def _step_batch(self, rho_obs: np.ndarray, months: float,
+                    ) -> DaemonCycleReport:
+        self._batch_hist.append(rho_obs)
+        rho = (np.asarray(self.forecast_fn(list(self._batch_hist)),
+                          np.float64)
+               if self.forecast_fn is not None else rho_obs)
+        held = self._months_held + months
+        mig = self.engine.reoptimize(
+            self.plan, rho, months_held=held,
+            rho_rel_tol=self.rho_rel_tol, rho_abs_tol=self.rho_abs_tol,
+            rho_ref=self._rho_ref)
+        keep = self._choose(mig, self._age_arr)
+        mig = mig.select(keep)
+
+        self._months_held = np.where(mig.moved, 0.0, held)
+        deferred = mig.deferred
+        self._age_arr = np.where(deferred, self._age_arr + 1, 0)
+        # keep the lock base for locked survivors (slow drift accumulates)
+        # and for deferred moves (they must re-enter the candidate set);
+        # re-base everything that moved or was re-decided while unlocked
+        drifted = drift_gate(rho, self._rho_ref, self.rho_rel_tol,
+                             self.rho_abs_tol)
+        self._rho_ref = np.where(~mig.moved & (~drifted | deferred),
+                                 self._rho_ref, rho)
+        self.plan = mig.plan
+        if self.store is not None:
+            self.store.advance_months(months)
+            self.store.migrate(mig, self.store_keys)
+        return self._report(mig, deferred,
+                            int(self._age_arr.max()) if deferred.any()
+                            else 0)
+
+    # ------------------------------------------------------ streaming mode
+    def _project_stream(self, parts, rho_obs: np.ndarray) -> np.ndarray:
+        keys = occurrence_keys(parts)
+        out = rho_obs.astype(np.float64).copy()
+        for i, k in enumerate(keys):
+            h = self._rho_hist.setdefault(
+                k, collections.deque(maxlen=self.forecast_window))
+            h.append(float(rho_obs[i]))
+            out[i] = float(self.forecast_fn(list(h)))
+        for stale in set(self._rho_hist) - set(keys):
+            del self._rho_hist[stale]
+        return out
+
+    def _step_stream(self, batch, months: float) -> DaemonCycleReport:
+        captured: Dict[str, list] = {}
+
+        def select(mig: MigrationPlan) -> np.ndarray:
+            keys = occurrence_keys(mig.plan.problem.partitions)
+            ages = np.array([self._ages.get(k, 0) for k in keys], int)
+            captured["keys"] = keys
+            return self._choose(mig, ages)
+
+        mig = self.engine.ingest_and_reoptimize(
+            batch, months=months,
+            select_moves=select if self.budget.finite else None,
+            project_rho=(self._project_stream
+                         if self.forecast_fn is not None else None))
+        keys = captured.get(
+            "keys", occurrence_keys(mig.plan.problem.partitions or []))
+        deferred = mig.deferred
+        self._ages = {k: self._ages.get(k, 0) + 1
+                      for k, d in zip(keys, deferred) if d}
+        if self.store is not None:
+            self.store.advance_months(months)
+            parts = mig.plan.problem.partitions or []
+            payloads = ([self.payload_fn(p) for p in parts]
+                        if self.payload_fn is not None else None)
+            if parts:
+                self.store.sync_plan(mig.plan, payloads=payloads)
+        return self._report(mig, deferred,
+                            max(self._ages.values(), default=0))
+
+    # ------------------------------------------------------------- report
+    def _report(self, mig: MigrationPlan, deferred: np.ndarray,
+                max_age: int) -> DaemonCycleReport:
+        transfer, egress, penalty, gb = self._spent(mig)
+        rep = DaemonCycleReport(
+            cycle=len(self.history),
+            n_partitions=mig.plan.problem.n,
+            n_candidates=mig.n_candidates, n_selected=mig.n_moved,
+            n_deferred=int(deferred.sum()),
+            migration_cents=transfer, egress_cents=egress,
+            penalty_cents=penalty,
+            spent_cents=transfer + egress + penalty,
+            moved_gb=gb, steady_cents=mig.plan.report.total_cents,
+            max_deferral_age=max_age)
+        self.history.append(rep)
+        return rep

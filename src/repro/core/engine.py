@@ -128,12 +128,35 @@ class PlacementPlan:
         return self.problem.spans_gb / self.problem.R[n, self.assignment.scheme]
 
 
+def drift_gate(rho: np.ndarray, rho_ref: np.ndarray, rho_rel_tol: float,
+               rho_abs_tol: float = 0.0) -> np.ndarray:
+    """Boolean drift mask shared by ``reoptimize``, the streaming engine,
+    and the daemon's hysteresis.
+
+    A partition counts as drifted only when ``|rho - rho_ref|`` exceeds
+    **both** the relative band (``rho_rel_tol`` of the lock-base rate) and
+    the absolute floor ``rho_abs_tol``. The floor is what keeps the scheme
+    lock stable for cold data: with ``rho_ref == 0`` the relative band
+    collapses to ~0, so without a floor a single epsilon access would
+    unlock (and churn) every cold partition.
+    """
+    thr = np.maximum(rho_rel_tol * np.maximum(rho_ref, 1e-12), rho_abs_tol)
+    return np.abs(rho - rho_ref) > thr
+
+
 @dataclasses.dataclass
 class MigrationPlan:
-    """Incremental move set produced by :meth:`PlacementEngine.reoptimize`."""
+    """Incremental move set produced by :meth:`PlacementEngine.reoptimize`.
+
+    The solver proposes a set of **candidate** moves; by default all of
+    them are **selected** (``moved == candidate``). Under a migration
+    budget, :meth:`select` keeps a subset and reverts the rest — the
+    daemon defers them to a later cycle. Per-move cents arrays carry the
+    one-off charge break-up so partial plans meter exactly.
+    """
 
     plan: PlacementPlan               # re-optimized placement (new rho)
-    moved: np.ndarray                 # (N,) bool — tier or scheme changed
+    moved: np.ndarray                 # (N,) bool — selected moves
     old_tier: np.ndarray
     new_tier: np.ndarray
     old_scheme: np.ndarray
@@ -142,14 +165,101 @@ class MigrationPlan:
     penalty_cents: float              # early-deletion charges
     egress_cents: float = 0.0         # cross-provider egress component of
     # migration_cents (already included there; broken out for visibility)
+    candidate: Optional[np.ndarray] = None   # (N,) bool — proposed moves
+    move_transfer_cents: Optional[np.ndarray] = None  # (N,) read+write, no egress
+    move_egress_cents: Optional[np.ndarray] = None    # (N,)
+    move_penalty_cents: Optional[np.ndarray] = None   # (N,)
+    old_stored_gb: Optional[np.ndarray] = None        # (N,) bytes at old cell
+
+    def __post_init__(self):
+        if self.candidate is None:
+            self.candidate = self.moved.copy()
+        z = lambda: np.zeros(self.moved.shape[0])
+        if self.move_transfer_cents is None:
+            self.move_transfer_cents = z()
+        if self.move_egress_cents is None:
+            self.move_egress_cents = z()
+        if self.move_penalty_cents is None:
+            self.move_penalty_cents = z()
+        if self.old_stored_gb is None:
+            self.old_stored_gb = z()
 
     @property
     def n_moved(self) -> int:
         return int(self.moved.sum())
 
     @property
+    def n_candidates(self) -> int:
+        return int(self.candidate.sum())
+
+    @property
+    def deferred(self) -> np.ndarray:
+        """(N,) bool — candidate moves not selected this cycle."""
+        return self.candidate & ~self.moved
+
+    @property
     def total_move_cents(self) -> float:
         return self.migration_cents + self.penalty_cents
+
+    def steady_savings_cents(self, months: Optional[float] = None,
+                             ) -> np.ndarray:
+        """(N,) steady-state cents each candidate move saves over ``months``
+        (default: the plan's ``cfg.months`` horizon) — old cell minus new
+        cell under the plan's access rates. The daemon's knapsack numerator.
+        """
+        p = self.plan.problem
+        t = p.table
+        m = p.cfg.months if months is None else float(months)
+        n = np.arange(p.n)
+        old_l = np.maximum(self.old_tier, 0)
+        old_k = np.maximum(self.old_scheme, 0)
+        new_l, new_k = self.new_tier.astype(int), self.new_scheme.astype(int)
+
+        def cell(stored, l, k):
+            return (stored * t.storage_cents_gb_month[l] * m
+                    + p.rho * (stored * t.read_cents_gb[l]
+                               + p.D[n, k] * t.compute_cents_sec))
+
+        new_stored = p.spans_gb / p.R[n, new_k]
+        sav = cell(self.old_stored_gb, old_l, old_k) \
+            - cell(new_stored, new_l, new_k)
+        return np.where(self.candidate, sav, 0.0)
+
+    def select(self, keep: np.ndarray) -> "MigrationPlan":
+        """Partial plan executing only ``candidate & keep``.
+
+        Deferred partitions revert to their old tier and scheme in the
+        returned plan's assignment (so ``TieredStore.migrate``/``sync_plan``
+        leave them untouched and the steady-state report prices the state
+        actually reached); aggregate cents re-sum the selected moves only.
+        When every candidate is kept, returns ``self`` unchanged — the
+        unbudgeted path stays bit-identical.
+        """
+        sel = self.candidate & np.asarray(keep, bool)
+        if bool((sel == self.candidate).all()):
+            return self
+        defer = self.candidate & ~sel
+        tier = np.where(defer, self.old_tier, self.new_tier).astype(int)
+        scheme = np.where(defer, self.old_scheme, self.new_scheme).astype(int)
+        problem = self.plan.problem
+        # the migration objective (one-off terms included) is not
+        # reconstructible here, so the partial assignment carries no cost
+        assignment = dataclasses.replace(self.plan.assignment, tier=tier,
+                                         scheme=scheme, cost=float("nan"))
+        report = BillingStage(problem.table, problem.cfg)(problem, assignment)
+        egress = float(np.where(sel, self.move_egress_cents, 0.0).sum())
+        transfer = float(np.where(sel, self.move_transfer_cents, 0.0).sum())
+        penalty = float(np.where(sel, self.move_penalty_cents, 0.0).sum())
+        return MigrationPlan(
+            plan=PlacementPlan(problem, assignment, report), moved=sel,
+            old_tier=self.old_tier, new_tier=tier,
+            old_scheme=self.old_scheme, new_scheme=scheme,
+            migration_cents=egress + transfer, penalty_cents=penalty,
+            egress_cents=egress, candidate=self.candidate.copy(),
+            move_transfer_cents=self.move_transfer_cents,
+            move_egress_cents=self.move_egress_cents,
+            move_penalty_cents=self.move_penalty_cents,
+            old_stored_gb=self.old_stored_gb)
 
 
 # ------------------------------------------------------------------ stages
@@ -383,9 +493,11 @@ class PlacementEngine:
 
     # ------------------------------------------------------------ online path
     def reoptimize(self, plan: PlacementPlan, new_rho: np.ndarray,
-                   months_held: float = 0.0,
+                   months_held: "float | np.ndarray" = 0.0,
                    lock_unchanged: bool = True,
-                   rho_rel_tol: float = 0.25) -> MigrationPlan:
+                   rho_rel_tol: float = 0.25,
+                   rho_abs_tol: float = 0.0,
+                   rho_ref: Optional[np.ndarray] = None) -> MigrationPlan:
         """Incremental migration plan for drifted access rates.
 
         The assignment objective is the steady-state cost under ``new_rho``
@@ -393,25 +505,42 @@ class PlacementEngine:
         (already in the cost tensor via ``current_tier`` and Delta_{u,v}),
         same-tier re-compression transfer, and early-deletion penalties for
         leaving a tier before its minimum stay (``months_held`` months after
-        the last placement). Partitions whose access rate drifted less than
-        ``rho_rel_tol`` (relative) keep their scheme locked, so stable data
-        is never re-compressed.
+        the last placement). ``months_held`` may be a scalar or an (N,)
+        array — partitions placed at different times (e.g. a daemon's
+        survivors vs. last cycle's movers) price their early-delete
+        penalties with their own residency clocks. Partitions whose access
+        rate drifted less than ``rho_rel_tol`` (relative, with the
+        ``rho_abs_tol`` absolute floor — see :func:`drift_gate`) keep their
+        scheme locked, so stable data is never re-compressed. ``rho_ref``
+        overrides the drift-lock base (default: the rates ``plan`` was
+        solved under) — a daemon chaining reoptimize calls passes the rate
+        each scheme was *chosen* under, so slow drift still accumulates and
+        budget-deferred moves stay drifted (the streaming engine carries
+        this base internally).
         """
         prob = plan.problem
         new_rho = np.asarray(new_rho, np.float64)
         cur_l = plan.assignment.tier.astype(int)
         cur_k = plan.assignment.scheme.astype(int)
+        months_held = np.asarray(months_held, np.float64)
+        if months_held.ndim not in (0, 1) or (
+                months_held.ndim == 1 and months_held.shape[0] != prob.n):
+            raise ValueError(f"months_held must be a scalar or shape "
+                             f"({prob.n},), got {months_held.shape}")
         problem2 = dataclasses.replace(prob, rho=new_rho, current_tier=cur_l)
+        ref = prob.rho if rho_ref is None else np.asarray(rho_ref, np.float64)
         return self._solve_migration(problem2, cur_l, cur_k, plan.stored_gb,
                                      months_held, lock_unchanged,
-                                     rho_rel_tol, prob.rho)
+                                     rho_rel_tol, ref,
+                                     rho_abs_tol=rho_abs_tol)
 
     def _solve_migration(self, problem2: PlacementProblem,
                          cur_l: np.ndarray, cur_k: np.ndarray,
                          old_stored: np.ndarray,
                          months_held: "float | np.ndarray",
                          lock_unchanged: bool, rho_rel_tol: float,
-                         rho_ref: np.ndarray) -> MigrationPlan:
+                         rho_ref: np.ndarray,
+                         rho_abs_tol: float = 0.0) -> MigrationPlan:
         """Shared migration core for :meth:`reoptimize` and the streaming
         engine. ``cur_l``/``cur_k`` may contain -1 for partitions that are
         new to the placement (no penalty, no transfer — pure ingestion via
@@ -422,8 +551,7 @@ class PlacementEngine:
         L = table.num_tiers
         K = len(problem2.schemes)
 
-        drifted = (np.abs(problem2.rho - rho_ref)
-                   > rho_rel_tol * np.maximum(rho_ref, 1e-12))
+        drifted = drift_gate(problem2.rho, rho_ref, rho_rel_tol, rho_abs_tol)
         locked = None
         if lock_unchanged:
             locked = np.where(~drifted & (cur_k >= 0), cur_k, -1)
@@ -477,17 +605,23 @@ class PlacementEngine:
         # (possibly re-compressed) payload into the destination tier.
         write_gb = np.where(new_k == cur_k, old_stored, new_stored)
         egress_gb = move_egress_cents_gb(table, cur_l, new_l)    # (N,)
-        egress = float(np.where(moved, old_stored * egress_gb, 0.0).sum())
-        migration = egress + float(np.where(
+        egress_n = np.where(moved, old_stored * egress_gb, 0.0)
+        transfer_n = np.where(
             moved,
             old_stored * table.read_cents_gb[safe_l]
-            + write_gb * table.write_cents_gb[new_l], 0.0).sum())
-        penalty = float(np.where(moved, penalty_cents_n, 0.0).sum())
+            + write_gb * table.write_cents_gb[new_l], 0.0)
+        pen_n = np.where(moved, penalty_cents_n, 0.0)
+        egress = float(egress_n.sum())
+        migration = egress + float(transfer_n.sum())
+        penalty = float(pen_n.sum())
         return MigrationPlan(
             plan=new_plan, moved=moved, old_tier=cur_l, new_tier=new_l,
             old_scheme=cur_k, new_scheme=new_k,
             migration_cents=migration, penalty_cents=penalty,
-            egress_cents=egress)
+            egress_cents=egress, candidate=moved.copy(),
+            move_transfer_cents=transfer_n, move_egress_cents=egress_n,
+            move_penalty_cents=pen_n,
+            old_stored_gb=np.asarray(old_stored, np.float64))
 
 
 # --------------------------------------------------------------- streaming
@@ -541,6 +675,7 @@ class StreamStepReport:
     penalty_cents: float
     steady_cents: float               # steady-state bill of the new plan
     egress_cents: float = 0.0         # cross-provider egress paid this step
+    n_deferred: int = 0               # candidate moves a budget postponed
 
 
 @dataclasses.dataclass
@@ -579,6 +714,7 @@ class StreamingEngine:
                  s_thresh: Optional[float] = None,
                  decay: float = 1.0, window: Optional[int] = None,
                  drift_threshold: float = 0.5, rho_rel_tol: float = 0.25,
+                 rho_abs_tol: float = 0.0,
                  rd_fn: Optional[Callable[[List[datapart.Partition],
                                            Sequence[str]],
                                           Tuple[np.ndarray, np.ndarray]]]
@@ -593,6 +729,7 @@ class StreamingEngine:
         self._window = window
         self._drift_threshold = drift_threshold
         self.rho_rel_tol = rho_rel_tol
+        self.rho_abs_tol = rho_abs_tol
         self.rd_fn = rd_fn
         self.partitioner: Optional[StreamingPartitioner] = None
         self.plan: Optional[PlacementPlan] = None
@@ -640,7 +777,10 @@ class StreamingEngine:
             partitions=list(parts), raw_bytes=None)
 
     def _empty_migration(self) -> MigrationPlan:
+        # constructs the SAME field set as the live _solve_migration path —
+        # empty steps must not fall back to defaulted/missing fields
         z = np.zeros(0, int)
+        zf = np.zeros(0, np.float64)
         problem = self._build_problem([], z)
         assignment = Assignment(tier=z.copy(), scheme=z.copy(),
                                 cost=0.0, feasible=True)
@@ -649,11 +789,21 @@ class StreamingEngine:
         return MigrationPlan(
             plan=plan, moved=np.zeros(0, bool), old_tier=z.copy(),
             new_tier=z.copy(), old_scheme=z.copy(), new_scheme=z.copy(),
-            migration_cents=0.0, penalty_cents=0.0)
+            migration_cents=0.0, penalty_cents=0.0, egress_cents=0.0,
+            candidate=np.zeros(0, bool), move_transfer_cents=zf.copy(),
+            move_egress_cents=zf.copy(), move_penalty_cents=zf.copy(),
+            old_stored_gb=zf.copy())
 
     # ---------------------------------------------------------------- steps
     def ingest_and_reoptimize(self, query_files: QueryFamilies,
-                              months: float = 1.0) -> MigrationPlan:
+                              months: float = 1.0, *,
+                              select_moves: Optional[
+                                  Callable[[MigrationPlan], np.ndarray]]
+                              = None,
+                              project_rho: Optional[
+                                  Callable[[List[datapart.Partition],
+                                            np.ndarray], np.ndarray]]
+                              = None) -> MigrationPlan:
         """Fold one access-log batch in, compact if drifted, re-optimize.
 
         ``months`` is the logical time elapsed since the previous batch; it
@@ -661,6 +811,16 @@ class StreamingEngine:
         penalties are priced. Returns the :class:`MigrationPlan` (``moved``
         covers surviving partitions only; new ones appear in the plan with
         ingestion write cost already internalized by the cost tensor).
+
+        ``project_rho(parts, rho_observed) -> rho_projected`` optionally
+        replaces the partitioner's observed rates with a forecast before
+        the solve (the daemon's forecast hook); the drift gate and lock
+        bookkeeping then operate on the projected rates. ``select_moves``
+        turns the step into a **partial** one: it receives the full
+        candidate :class:`MigrationPlan` and returns a boolean keep mask —
+        deferred candidates stay at their old tier/scheme, keep their
+        lock base (so they re-surface as drifted next batch) and their
+        minimum-stay clock keeps running.
         """
         sp = self._ensure_partitioner(query_files)
         compacted = False
@@ -671,13 +831,14 @@ class StreamingEngine:
         N = len(parts)
         if N == 0:
             # empty stream state (empty batches, or the whole window
-            # expired): a no-op step — the solvers don't accept N=0
+            # expired): a no-op step — the solvers don't accept N=0.
+            # Construct the report with the live path's full field set.
             mig = self._empty_migration()
             self.plan = mig.plan
             self.history.append(StreamStepReport(
                 batch=len(self.history), n_partitions=0, n_new=0, n_moved=0,
                 compacted=compacted, migration_cents=0.0, penalty_cents=0.0,
-                steady_cents=0.0))
+                steady_cents=0.0, egress_cents=0.0, n_deferred=0))
             return mig
         cur_l = np.full(N, -1, int)
         cur_k = np.full(N, -1, int)
@@ -694,13 +855,22 @@ class StreamingEngine:
                 held_months[i] = st.months_held + months
 
         problem = self._build_problem(parts, cur_l)
+        if project_rho is not None:
+            proj = np.asarray(project_rho(parts, problem.rho), np.float64)
+            if proj.shape != problem.rho.shape:
+                raise ValueError(f"project_rho must return shape "
+                                 f"{problem.rho.shape}, got {proj.shape}")
+            problem = dataclasses.replace(problem, rho=proj)
         mig = self.engine._solve_migration(
             problem, cur_l, cur_k, old_stored, held_months,
             lock_unchanged=True, rho_rel_tol=self.rho_rel_tol,
-            rho_ref=rho_ref)
+            rho_ref=rho_ref, rho_abs_tol=self.rho_abs_tol)
+        if select_moves is not None:
+            mig = mig.select(np.asarray(select_moves(mig), bool))
 
-        drifted = (np.abs(problem.rho - rho_ref)
-                   > self.rho_rel_tol * np.maximum(rho_ref, 1e-12))
+        drifted = drift_gate(problem.rho, rho_ref, self.rho_rel_tol,
+                             self.rho_abs_tol)
+        deferred = mig.deferred
         new_stored = mig.plan.stored_gb
         self._held = {}
         for i, p in enumerate(parts):
@@ -709,8 +879,11 @@ class StreamingEngine:
                 tier=int(mig.new_tier[i]), scheme=int(mig.new_scheme[i]),
                 stored_gb=float(new_stored[i]),
                 # the scheme was (re-)decided now unless the partition was
-                # locked: keep the lock base so slow drift still accumulates
-                rho_ref=(float(rho_ref[i]) if surviving and not drifted[i]
+                # locked: keep the lock base so slow drift still accumulates.
+                # Deferred moves also keep it — they must stay "drifted"
+                # and re-enter the candidate set next batch.
+                rho_ref=(float(rho_ref[i])
+                         if surviving and (not drifted[i] or deferred[i])
                          else float(problem.rho[i])),
                 months_held=float(held_months[i]) if surviving else 0.0))
         self.plan = mig.plan
@@ -720,5 +893,6 @@ class StreamingEngine:
             compacted=compacted, migration_cents=mig.migration_cents,
             penalty_cents=mig.penalty_cents,
             steady_cents=mig.plan.report.total_cents,
-            egress_cents=mig.egress_cents))
+            egress_cents=mig.egress_cents,
+            n_deferred=int(deferred.sum())))
         return mig

@@ -512,6 +512,125 @@ def capacitated_assign_ref(
     return best
 
 
+# ------------------------------------------------------------ budgeted moves
+@jax.jit
+def _knapsack_scan(order: jnp.ndarray, cents: jnp.ndarray, gb: jnp.ndarray,
+                   ok: jnp.ndarray, cap_cents: jnp.ndarray,
+                   cap_gb: jnp.ndarray):
+    """Greedy knapsack walk over pre-ranked items as one ``lax.scan``.
+
+    Items arrive in ``order`` (best ratio first); each is taken iff it is
+    eligible and fits both remaining budgets. Returns take flags in walk
+    order (scatter back through ``order`` on the host)."""
+
+    def body(carry, i):
+        rem_c, rem_g = carry
+        take = ok[i] & (cents[i] <= rem_c + 1e-9) & (gb[i] <= rem_g + 1e-9)
+        rem_c = rem_c - jnp.where(take, cents[i], 0.0)
+        rem_g = rem_g - jnp.where(take, gb[i], 0.0)
+        return (rem_c, rem_g), take
+
+    _, takes = jax.lax.scan(body, (cap_cents, cap_gb), order)
+    return takes
+
+
+def _exact_moves(savings: np.ndarray, cents: np.ndarray, gb: np.ndarray,
+                 cand: np.ndarray, budget_cents: float, budget_gb: float,
+                 ) -> np.ndarray:
+    """Exact subset enumeration (vectorized bit-matrix), tiny instances only.
+
+    Maximizes total (priority-weighted) savings subject to both caps;
+    ties broken toward the cheaper subset, then the lexicographically
+    first one, so the result is deterministic."""
+    idx = np.where(cand)[0]
+    n = idx.size
+    M = ((np.arange(1 << n)[:, None] >> np.arange(n)) & 1).astype(bool)
+    tot_c = M @ cents[idx]
+    tot_g = M @ gb[idx]
+    obj = M @ savings[idx]
+    feas = (tot_c <= budget_cents + 1e-9) & (tot_g <= budget_gb + 1e-9)
+    obj = np.where(feas, obj, -np.inf)
+    # lexsort keys: last key is primary — max obj, then min cost, then the
+    # smallest subset id (M rows are already in lexicographic order)
+    best = int(np.lexsort((np.arange(1 << n), tot_c, -obj))[0])
+    keep = np.zeros(savings.shape[0], bool)
+    keep[idx[M[best]]] = True
+    return keep
+
+
+def budgeted_moves(
+    savings_cents: np.ndarray,   # (N,) projected steady-state saving per move
+    move_cents: np.ndarray,      # (N,) one-off charge per move (cents)
+    budget_cents: float,         # per-cycle cents cap (np.inf = unbounded)
+    *,
+    candidates: Optional[np.ndarray] = None,   # (N,) bool; None = all
+    move_gb: Optional[np.ndarray] = None,      # (N,) bytes leaving their cell
+    budget_gb: float = np.inf,                 # per-cycle GB cap
+    priority: Optional[np.ndarray] = None,     # (N,) aging boost (>= 1)
+    method: str = "auto",                      # 'auto' | 'greedy' | 'exact'
+    exact_max: int = 12,
+) -> np.ndarray:
+    """Select which candidate migrations to execute under a per-cycle budget.
+
+    The savings-per-migration-cent knapsack of the re-optimization daemon:
+    maximize total projected steady-state savings subject to a cents cap
+    (and optionally a GB cap) on the one-off migration spend. The
+    production path is a jnp-batched greedy-ratio walk — rank every
+    candidate by ``priority * savings / cents`` on device (argsort), then
+    take items in rank order while they fit both budgets (one jitted
+    ``lax.scan``). ``method='exact'`` enumerates subsets instead (tiny
+    instances; the validation oracle for the greedy path). ``'auto'``
+    uses the exact path when there are at most ``exact_max`` candidates.
+
+    Zero-cost moves rank first and never consume budget; with both caps
+    infinite every candidate is selected (the daemon's parity mode).
+    Candidates with non-positive projected savings stay eligible — the
+    assignment solver already justified the move (its objective sees
+    constraint and one-off terms this per-cell projection does not), and
+    selection only schedules spend — but their selection value is floored
+    at a priority-scaled epsilon, so they rank below every
+    positive-savings candidate on BOTH paths and only fill leftover
+    budget. Returns an (N,) boolean mask — always a subset of
+    ``candidates``.
+    """
+    s = np.asarray(savings_cents, np.float64)
+    c = np.asarray(move_cents, np.float64)
+    N = s.shape[0]
+    cand = (np.ones(N, bool) if candidates is None
+            else np.asarray(candidates, bool).copy())
+    g = (np.zeros(N) if move_gb is None
+         else np.asarray(move_gb, np.float64))
+    pr = np.ones(N) if priority is None else np.asarray(priority, np.float64)
+    if N == 0 or not cand.any():
+        return np.zeros(N, bool)
+    if np.isinf(budget_cents) and np.isinf(budget_gb):
+        return cand
+    if method not in ("auto", "greedy", "exact"):
+        raise ValueError(f"unknown method {method!r}")
+    val = pr * s
+    val = np.where(val > 0, val, 1e-9 * pr)   # take-if-fits, ranked last
+    if method == "exact" or (method == "auto"
+                             and int(cand.sum()) <= exact_max):
+        return _exact_moves(val, c, g, cand, budget_cents, budget_gb)
+
+    ratio = np.where(cand, val / np.maximum(c, 1e-12), -np.inf)
+    order = jnp.argsort(-jnp.asarray(ratio))
+    takes = np.asarray(_knapsack_scan(
+        order, jnp.asarray(c), jnp.asarray(g), jnp.asarray(cand),
+        jnp.asarray(budget_cents, jnp.float32),
+        jnp.asarray(budget_gb, jnp.float32)))
+    keep = np.zeros(N, bool)
+    keep[np.asarray(order)] = takes
+    keep &= cand
+    # the scan ran in f32; re-walk the selected set in f64 and shed the
+    # worst-ratio items if rounding let the total creep past a cap
+    while keep.any() and (c[keep].sum() > budget_cents + 1e-9
+                          or g[keep].sum() > budget_gb + 1e-9):
+        sel = np.where(keep)[0]
+        keep[sel[np.argmin(ratio[sel])]] = False
+    return keep
+
+
 # ---------------------------------------------------------------- brute force
 def brute_force(cost: np.ndarray, feasible: np.ndarray,
                 stored_gb: Optional[np.ndarray] = None,

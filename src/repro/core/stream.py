@@ -39,6 +39,27 @@ from repro.core.datapart import (FileSizes, Partition, feasible_pair,
 QueryFamilies = Sequence[Tuple[Tuple[str, ...], float]]
 
 
+def occurrence_keys(parts: Sequence[Partition],
+                    ) -> List[Tuple[FrozenSet[str], int]]:
+    """Stable per-partition identity: ``(file set, occurrence index)``.
+
+    Two live partitions can share a file set (a query family can coexist
+    with a merge producing the same union when access-comparability blocks
+    folding them), so bare file sets are not unique; duplicates get an
+    occurrence index in plan order. This is THE disambiguation rule for
+    anything keyed by partition identity across re-partitionings —
+    ``TieredStore.plan_keys`` object keys and the re-optimization daemon's
+    deferral/forecast bookkeeping both derive from it.
+    """
+    keys: List[Tuple[FrozenSet[str], int]] = []
+    seen: Dict[FrozenSet[str], int] = {}
+    for p in parts:
+        c = seen.get(p.files, 0)
+        seen[p.files] = c + 1
+        keys.append((p.files, c))
+    return keys
+
+
 @dataclasses.dataclass
 class StreamStats:
     """Counters for the ingest/compact lifecycle (benchmarks report these)."""

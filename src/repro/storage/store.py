@@ -16,6 +16,8 @@ import threading
 import time
 from typing import Dict, Iterable, Optional
 
+import numpy as np
+
 from repro.core.costs import CostTable, azure_table, move_egress_cents_gb
 from repro.storage.codecs import Codec, codec_by_name
 
@@ -182,6 +184,11 @@ class TieredStore:
         early-deletion penalty). Scheme changes re-encode: get (read +
         decompression compute), delete (penalty), put (write). Returns the
         number of objects moved.
+
+        Partial plans (``MigrationPlan.select``) work unchanged: only the
+        *selected* moves appear in ``migration.moved``, so deferred
+        candidates are left untouched and the metered cents equal the
+        partial plan's ``migration_cents + penalty_cents`` exactly.
         """
         schemes = migration.plan.problem.schemes
         moved_idx = [int(n) for n in range(len(migration.moved))
@@ -215,18 +222,13 @@ class TieredStore:
 
     @classmethod
     def plan_keys(cls, plan) -> list:
-        """Object key per plan partition. Two live partitions can share a
-        file set (a query family can coexist with a merge producing the same
-        union when access-comparability blocks folding them), so duplicates
-        get an occurrence-index suffix in plan order."""
-        keys = []
-        seen: Dict[str, int] = {}
-        for p in plan.problem.partitions:
-            base = cls.partition_key(p.files)
-            c = seen.get(base, 0)
-            seen[base] = c + 1
-            keys.append(base if c == 0 else f"{base}#{c}")
-        return keys
+        """Object key per plan partition — the string form of
+        ``stream.occurrence_keys``: duplicated file sets (a family can
+        coexist with a merge producing the same union) get an
+        occurrence-index suffix in plan order."""
+        from repro.core.stream import occurrence_keys
+        return [cls.partition_key(files) + ("" if c == 0 else f"#{c}")
+                for files, c in occurrence_keys(plan.problem.partitions)]
 
     def sync_plan(self, plan, payloads: Optional[list] = None) -> Dict[str, int]:
         """Reconcile store contents with a (streaming) ``PlacementPlan``.
@@ -280,6 +282,14 @@ class TieredStore:
     # ----------------------------------------------------------------- intro
     def tier_of(self, key: str) -> int:
         return self._objs[key].tier
+
+    def months_held(self, keys: Iterable[str]) -> np.ndarray:
+        """Per-object months since the last placement/move — the residency
+        clocks ``PlacementEngine.reoptimize(months_held=...)`` expects, so a
+        daemon driving a live store can price early-delete penalties from
+        the store's own ground truth instead of a shadow clock."""
+        return np.array([self._month - self._objs[k].moved_month
+                         for k in keys], np.float64)
 
     def stored_gb(self, key: str) -> float:
         return self._objs[key].stored_gb

@@ -1,0 +1,411 @@
+"""ReoptimizationDaemon: budget-capped selection, deferral bookkeeping,
+parity with plain reoptimize/ingest_and_reoptimize, knapsack correctness.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.costs import azure_table
+from repro.core.daemon import (DaemonCycleReport, MigrationBudget,
+                               ReoptimizationDaemon, linear_trend_forecast)
+from repro.core.engine import (PlacementEngine, PlacementProblem, ScopeConfig,
+                               StreamingEngine)
+from repro.core.optassign import budgeted_moves
+from repro.storage.store import TieredStore
+
+
+# ------------------------------------------------------------ knapsack unit
+def test_budgeted_moves_cap_binds_exactly():
+    """Constructed instance where the greedy fill lands exactly on the cap."""
+    savings = np.array([10.0, 8.0, 6.0, 1.0])
+    cents = np.array([3.0, 3.0, 4.0, 0.0])
+    for method in ("greedy", "exact"):
+        keep = budgeted_moves(savings, cents, 6.0, method=method)
+        assert keep.tolist() == [True, True, False, True], method
+        assert cents[keep].sum() == 6.0, method  # binds exactly
+
+
+def test_budgeted_moves_infinite_budget_selects_all_candidates():
+    cand = np.array([True, False, True])
+    keep = budgeted_moves(np.array([1.0, 5.0, -2.0]), np.array([9., 9., 9.]),
+                          np.inf, candidates=cand)
+    assert (keep == cand).all()
+
+
+def test_budgeted_moves_gb_cap_and_zero_cost():
+    savings = np.array([5.0, 4.0, 3.0])
+    cents = np.array([0.0, 1.0, 1.0])
+    gb = np.array([10.0, 6.0, 5.0])
+    keep = budgeted_moves(savings, cents, np.inf, move_gb=gb, budget_gb=16.0,
+                          method="greedy")
+    # zero-cost best-ratio move first (10 GB), then only the 6 GB one fits
+    assert keep.tolist() == [True, True, False]
+    keep = budgeted_moves(savings, cents, 0.0, move_gb=gb, budget_gb=np.inf,
+                          method="greedy")
+    assert keep.tolist() == [True, False, False]  # only free moves fit
+
+
+def test_budgeted_moves_greedy_matches_exact_on_tiny_instances():
+    """Equal-cost instances: ratio order == savings order, so greedy is
+    optimal and must match the exact enumeration; on general instances the
+    exact oracle is never worse."""
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        n = int(rng.integers(1, 9))
+        s = rng.uniform(0.5, 10.0, n)
+        # equal costs: greedy == exact
+        c = np.full(n, 2.0)
+        budget = float(rng.integers(0, 2 * n + 1))
+        g = budgeted_moves(s, c, budget, method="greedy")
+        e = budgeted_moves(s, c, budget, method="exact")
+        assert s[g].sum() == pytest.approx(s[e].sum()), trial
+        # general costs: exact >= greedy, both within budget
+        c = rng.uniform(0.5, 4.0, n)
+        g = budgeted_moves(s, c, budget, method="greedy")
+        e = budgeted_moves(s, c, budget, method="exact")
+        assert c[g].sum() <= budget + 1e-9 and c[e].sum() <= budget + 1e-9
+        assert s[e].sum() >= s[g].sum() - 1e-9, trial
+
+
+def test_budgeted_moves_negative_savings_rank_last_on_both_paths():
+    """A negative-projected-savings candidate (e.g. a capacity-forced move
+    the solver insists on) is still taken when budget remains — on BOTH the
+    greedy and the exact path — but never displaces positive savings."""
+    savings = np.array([5.0, -2.0])
+    cents = np.array([3.0, 3.0])
+    for method in ("greedy", "exact"):
+        # room for both: take both (selection schedules, doesn't judge)
+        assert budgeted_moves(savings, cents, 6.0,
+                              method=method).tolist() == [True, True]
+        # room for one: the positive-savings move wins
+        assert budgeted_moves(savings, cents, 3.0,
+                              method=method).tolist() == [True, False]
+
+
+def test_budgeted_moves_priority_aging_promotes_old_moves():
+    """A deferred move's aging boost eventually outranks a fresher,
+    higher-ratio competitor."""
+    savings = np.array([10.0, 6.0])
+    cents = np.array([5.0, 5.0])          # budget fits exactly one
+    keep = budgeted_moves(savings, cents, 5.0, method="greedy")
+    assert keep.tolist() == [True, False]
+    aged = budgeted_moves(savings, cents, 5.0, method="greedy",
+                          priority=np.array([1.0, 2.0]))
+    assert aged.tolist() == [False, True]
+
+
+# ------------------------------------------------------------- batch fixture
+def _batch_setup(N=40, seed=0):
+    table = azure_table()
+    cfg = ScopeConfig(tier_whitelist=(0, 1, 2, 3), schemes=("none", "lz4"))
+    rng = np.random.default_rng(seed)
+    spans = rng.lognormal(0.0, 1.2, N) * 2.0
+    rho = rng.gamma(0.7, 25.0, N)
+    R = np.concatenate([np.ones((N, 1)), rng.uniform(1.2, 6.0, (N, 1))], 1)
+    D = np.concatenate([np.zeros((N, 1)),
+                        rng.uniform(0.01, 2.0, (N, 1)) * spans[:, None]], 1)
+    prob = PlacementProblem(spans_gb=spans, rho=rho,
+                            current_tier=np.full(N, -1), R=R, D=D,
+                            schemes=cfg.schemes, table=table, cfg=cfg)
+    eng = PlacementEngine(table, cfg)
+    plan0 = eng.solve(prob)
+    drifts = []
+    r = rho.copy()
+    for t in range(4):
+        r = r.copy()
+        r[3 * t:3 * t + 3] *= 50.0
+        drifts.append(r.copy())
+    return eng, plan0, drifts
+
+
+def test_batch_daemon_infinite_budget_is_bit_identical_to_reoptimize():
+    """Acceptance: infinite budget + zero rho_abs_tol reproduces the plain
+    reoptimize chain exactly — plans and metered cents bit-identical."""
+    eng, plan0, drifts = _batch_setup()
+    N = plan0.problem.n
+    cur, held, manual = plan0, np.zeros(N), []
+    for r in drifts:
+        h = held + 1.0
+        mig = eng.reoptimize(cur, r, months_held=h)
+        held = np.where(mig.moved, 0.0, h)
+        cur = mig.plan
+        manual.append(mig)
+
+    d = ReoptimizationDaemon(eng, plan=plan0)
+    reps = d.run(drifts, months=1.0)
+    for mig, rep in zip(manual, reps):
+        assert rep.n_selected == mig.n_moved and rep.n_deferred == 0
+        assert rep.spent_cents == mig.total_move_cents          # exact
+        assert rep.egress_cents == mig.egress_cents
+        assert rep.steady_cents == mig.plan.report.total_cents
+    assert np.array_equal(d.plan.assignment.tier, cur.assignment.tier)
+    assert np.array_equal(d.plan.assignment.scheme, cur.assignment.scheme)
+    assert d.plan.report.total_cents == cur.report.total_cents
+
+
+def test_batch_daemon_budget_cap_never_exceeded_and_charge_once():
+    """Per-cycle spent_cents <= cap always; once drift stops, deferred moves
+    drain and later cycles charge nothing (charge-once across deferrals)."""
+    eng, plan0, drifts = _batch_setup()
+    # pad with quiet cycles so every deferred move has budget to drain into
+    cycles = drifts + [drifts[-1]] * 8
+    unb = ReoptimizationDaemon(eng, plan=plan0)
+    unb.run(cycles, months=1.0)
+    # the cap must admit the single most expensive move or it can never
+    # drain; 1.2x the per-move max still forces multi-move cycles to split
+    cur, held, per_move = plan0, np.zeros(plan0.problem.n), [0.0]
+    for r in cycles:
+        h = held + 1.0
+        mig = eng.reoptimize(cur, r, months_held=h)
+        held = np.where(mig.moved, 0.0, h)
+        cur = mig.plan
+        per_move.append(float((mig.move_transfer_cents + mig.move_egress_cents
+                               + mig.move_penalty_cents).max()))
+    cap = 1.2 * max(per_move)
+    assert cap < max(r.spent_cents for r in unb.history)  # cap actually binds
+    d = ReoptimizationDaemon(eng, plan=plan0,
+                             budget=MigrationBudget(cents_per_cycle=cap))
+    reps = d.run(cycles, months=1.0)
+    for rep in reps:
+        assert rep.spent_cents <= cap + 1e-9
+        assert (rep.migration_cents + rep.egress_cents + rep.penalty_cents
+                == pytest.approx(rep.spent_cents))
+    # the queue drains: no pending deferral at the end, and the last quiet
+    # cycles are free (nothing re-charged for moves already executed)
+    assert reps[-1].n_deferred == 0
+    assert reps[-1].spent_cents == 0.0 and reps[-2].spent_cents == 0.0
+    # converges to the same steady placement as the unbudgeted daemon
+    assert np.array_equal(d.plan.assignment.tier, unb.plan.assignment.tier)
+    assert d.plan.report.total_cents == pytest.approx(
+        unb.plan.report.total_cents)
+
+
+def test_batch_daemon_deferred_moves_age_and_execute_later():
+    eng, plan0, drifts = _batch_setup()
+    cycles = [drifts[0]] * 6
+    unb = ReoptimizationDaemon(eng, plan=plan0)
+    rep0 = unb.step(drifts[0], months=1.0)
+    assert rep0.n_selected >= 2, "fixture needs >= 2 moves on first drift"
+    # admits any single move but not the whole first cycle: some must wait
+    mig0 = eng.reoptimize(plan0, drifts[0], months_held=1.0)
+    cap = 1.2 * float((mig0.move_transfer_cents + mig0.move_egress_cents
+                       + mig0.move_penalty_cents).max())
+    assert cap < rep0.spent_cents
+    d = ReoptimizationDaemon(eng, plan=plan0,
+                             budget=MigrationBudget(cents_per_cycle=cap))
+    reps = d.run(cycles, months=1.0)
+    assert any(r.n_deferred > 0 for r in reps)
+    assert any(r.max_deferral_age >= 1 for r in reps)
+    # every proposed move eventually executes
+    assert sum(r.n_selected for r in reps) == rep0.n_selected
+    assert reps[-1].n_deferred == 0
+
+
+def test_min_stay_deferral_postpones_penalized_moves():
+    """A move whose early-delete penalty exceeds its projected steady saving
+    is postponed under a finite budget even when the budget would allow it;
+    as the residency clock prorates the penalty away, it executes."""
+    table = azure_table()
+    cfg = ScopeConfig(tier_whitelist=(2, 3), schemes=("none",), months=1.0)
+    eng = PlacementEngine(table, cfg)
+    # one 1 GB partition, placed on Cool (tier 2: 1-month minimum stay)
+    prob = PlacementProblem(
+        spans_gb=np.array([1.0]), rho=np.array([4.0]),
+        current_tier=np.full(1, -1), R=np.ones((1, 1)), D=np.zeros((1, 1)),
+        schemes=("none",), table=table, cfg=cfg)
+    plan = eng.solve(prob)
+    assert plan.assignment.tier[0] == 2
+    cold = np.array([0.01])  # went cold: Archive wins on steady storage.
+    # At 0.3 months held, the solver proposes the move (the prorated
+    # penalty is below the cfg.months saving), but over the daemon's short
+    # projection horizon the penalty still dominates -> deferred.
+    d = ReoptimizationDaemon(
+        eng, plan=plan, budget=MigrationBudget(cents_per_cycle=1e9),
+        horizon_months=0.25, rho_rel_tol=0.25)
+    rep1 = d.step(cold, months=0.3)
+    assert rep1.n_candidates == 1 and rep1.n_selected == 0
+    assert rep1.n_deferred == 1 and rep1.penalty_cents == 0.0
+    # after the minimum stay elapses the penalty is zero and the move runs
+    rep2 = d.step(cold, months=1.0)
+    assert rep2.n_selected == 1 and rep2.penalty_cents == 0.0
+
+
+def _payload_plan():
+    """Real-payload plan (truth-measured R/D) so a store can apply it."""
+    from repro.core.engine import CompressStage, PartitionedData
+    table = azure_table()
+    raws = [(bytes([65 + i % 8]) * (200_000 + 50_000 * i)) for i in range(6)]
+    cfg = ScopeConfig(tier_whitelist=(0, 1, 2), months=2.0)
+    eng = PlacementEngine(table, cfg)
+    data = PartitionedData(
+        partitions=[None] * len(raws), tables=[None] * len(raws),
+        raw_bytes=raws, spans_gb=np.array([len(b) / 1e9 for b in raws]),
+        rho=np.array([0.05, 0.1, 40.0, 0.02, 800.0, 5.0]))
+    return eng, eng.solve(CompressStage(cfg)(data, table))
+
+
+def test_batch_daemon_store_integration_meters_exactly():
+    """Attached TieredStore bills exactly the selected cents each cycle,
+    and its residency clocks agree with the daemon's."""
+    eng, plan0 = _payload_plan()
+    store = TieredStore(eng.table)
+    keys = store.apply_plan(plan0)
+    drift = plan0.problem.rho.copy()
+    drift[0] *= 5000.0
+    drift[4] /= 5000.0
+    unb = ReoptimizationDaemon(eng, plan=plan0)
+    unb.step(drift, months=1.0)
+    assert unb.history[0].n_selected >= 2
+    cap = 0.75 * unb.history[0].spent_cents
+    d = ReoptimizationDaemon(eng, plan=plan0, store=store, store_keys=keys,
+                             budget=MigrationBudget(cents_per_cycle=cap))
+    for _ in range(3):
+        m0 = store.meter
+        r0, w0, p0 = m0.read_cents, m0.write_cents, m0.penalty_cents
+        rep = d.step(drift, months=1.0)
+        transfer = (store.meter.read_cents - r0) + (store.meter.write_cents
+                                                    - w0)
+        assert transfer == pytest.approx(
+            rep.migration_cents + rep.egress_cents, rel=1e-9, abs=1e-12)
+        assert store.meter.penalty_cents - p0 == pytest.approx(
+            rep.penalty_cents, rel=1e-9, abs=1e-12)
+    np.testing.assert_allclose(store.months_held(keys), d._months_held)
+
+
+def test_batch_daemon_forecast_hook_feeds_projected_rho():
+    eng, plan0, drifts = _batch_setup()
+    target = plan0.problem.rho * 3.0
+
+    def forecast(history):
+        assert isinstance(history, list) and len(history) >= 1
+        return target
+
+    d = ReoptimizationDaemon(eng, plan=plan0, forecast_fn=forecast)
+    d.step(plan0.problem.rho.copy(), months=1.0)
+    np.testing.assert_array_equal(d.plan.problem.rho, target)
+
+
+def test_linear_trend_forecast():
+    assert linear_trend_forecast([3.0]) == 3.0
+    assert linear_trend_forecast([1.0, 2.0, 3.0]) == pytest.approx(4.0)
+    # clamps at zero on a downward trend
+    assert linear_trend_forecast([2.0, 1.0, 0.2]) == pytest.approx(0.0)
+    # vector histories broadcast (batch mode)
+    out = linear_trend_forecast([np.array([1.0, 5.0]), np.array([2.0, 3.0])])
+    np.testing.assert_allclose(out, [3.0, 1.0])
+
+
+# ---------------------------------------------------------------- streaming
+def _stream_engine(**kw):
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    sizes = {f"d{i}/{j}": 0.5 + 0.1 * j for i in range(6) for j in range(4)}
+    return StreamingEngine(azure_table(), cfg, sizes, s_thresh=5.0,
+                           window=1, drift_threshold=np.inf, **kw)
+
+
+def _stream_batch(h=400.0, c1=0.01, c2=0.01):
+    return [(("d0/0", "d0/1"), h),
+            (("d1/0", "d1/1", "d1/2"), c1),
+            (("d2/0", "d2/1"), c2)]
+
+
+def _stream_cycles():
+    quiet = _stream_batch()
+    hot = _stream_batch(c1=500.0, c2=450.0)
+    return [quiet, quiet, hot, hot, hot, hot]
+
+
+def test_stream_daemon_infinite_budget_is_bit_identical():
+    e1 = _stream_engine()
+    migs = [e1.ingest_and_reoptimize(b, months=1.0) for b in _stream_cycles()]
+    e2 = _stream_engine()
+    d = ReoptimizationDaemon(e2)
+    reps = d.run(_stream_cycles(), months=1.0)
+    for m, r in zip(migs, reps):
+        assert r.n_selected == m.n_moved and r.n_deferred == 0
+        assert r.spent_cents == m.total_move_cents
+        assert r.steady_cents == m.plan.report.total_cents
+    assert np.array_equal(e2.plan.assignment.tier, e1.plan.assignment.tier)
+    for s1, s2 in zip(e1.history, e2.history):
+        assert s1 == s2
+
+
+def test_stream_daemon_budget_defers_then_converges():
+    e1 = _stream_engine()
+    migs = [e1.ingest_and_reoptimize(b, months=1.0) for b in _stream_cycles()]
+    per_move = max(float((m.move_transfer_cents + m.move_egress_cents
+                          + m.move_penalty_cents).max()) for m in migs)
+    cap = per_move * 1.001                 # budget fits one move per cycle
+    e2 = _stream_engine()
+    d = ReoptimizationDaemon(e2, budget=MigrationBudget(cents_per_cycle=cap))
+    reps = d.run(_stream_cycles(), months=1.0)
+    for r in reps:
+        assert r.spent_cents <= cap + 1e-9
+    assert any(r.n_deferred > 0 for r in reps)
+    assert sum(r.n_selected for r in reps) == sum(m.n_moved for m in migs)
+    assert reps[-1].n_deferred == 0 and reps[-1].spent_cents == 0.0
+    # same final placement per file set as the unbudgeted stream
+    held1 = {k: (s[0].tier, s[0].scheme) for k, s in e1._held.items()}
+    held2 = {k: (s[0].tier, s[0].scheme) for k, s in e2._held.items()}
+    assert held1 == held2
+
+
+def test_stream_daemon_rejects_plan_argument():
+    with pytest.raises(ValueError):
+        ReoptimizationDaemon(_stream_engine(), plan=object())
+    with pytest.raises(ValueError):
+        ReoptimizationDaemon(PlacementEngine(azure_table(), ScopeConfig()))
+
+
+def test_stream_daemon_rejects_tolerance_arguments():
+    """Hysteresis lives on the StreamingEngine; silently dropping the
+    daemon's tolerance args would defeat the floor the caller asked for."""
+    with pytest.raises(ValueError):
+        ReoptimizationDaemon(_stream_engine(), rho_abs_tol=1.0)
+    with pytest.raises(ValueError):
+        ReoptimizationDaemon(_stream_engine(), rho_rel_tol=0.5)
+
+
+def test_batch_daemon_deferred_scheme_change_stays_in_candidate_set():
+    """Budget-deferred moves must keep their drift-lock base: without the
+    carried rho_ref, the next cycle re-bases rho, sees no drift, re-locks
+    the old scheme, and the deferred re-compression silently vanishes."""
+    import dataclasses as dc
+    from repro.core.engine import PlacementPlan
+    table = azure_table()
+    cfg = ScopeConfig(tier_whitelist=(1,), schemes=("none", "lz4"),
+                      months=2.0)
+    eng = PlacementEngine(table, cfg)
+    prob = PlacementProblem(
+        spans_gb=np.array([1.0]), rho=np.array([10.0]),
+        current_tier=np.full(1, -1), R=np.ones((1, 2)), D=np.zeros((1, 2)),
+        schemes=("none", "lz4"), table=table, cfg=cfg)
+    plan = eng.solve(prob)
+    assert plan.assignment.scheme[0] == 0
+    # the predictor later learns lz4 gives 5x; rho drifts past the gate
+    better = dc.replace(prob, R=np.array([[1.0, 5.0]]))
+    plan = PlacementPlan(better, plan.assignment, plan.report)
+    hot = np.array([100.0])
+    d = ReoptimizationDaemon(eng, plan=plan,
+                             budget=MigrationBudget(cents_per_cycle=0.0))
+    rep1 = d.step(hot, months=1.0)
+    assert rep1.n_candidates == 1 and rep1.n_deferred == 1
+    # same rates next cycle: the deferred re-compression is RE-proposed
+    rep2 = d.step(hot, months=1.0)
+    assert rep2.n_candidates == 1 and rep2.n_deferred == 1
+    assert rep2.max_deferral_age == 2
+    # budget restored: the move finally executes
+    d.budget = MigrationBudget()
+    rep3 = d.step(hot, months=1.0)
+    assert rep3.n_selected == 1
+    assert d.plan.assignment.scheme[0] == 1
+
+
+def test_daemon_reports_are_dataclasses_with_stable_fields():
+    e = _stream_engine()
+    d = ReoptimizationDaemon(e)
+    rep = d.step(_stream_batch(), months=1.0)
+    assert isinstance(rep, DaemonCycleReport)
+    assert rep.cycle == 0 and rep.n_partitions > 0
+    assert rep.spent_cents == pytest.approx(
+        rep.migration_cents + rep.egress_cents + rep.penalty_cents)

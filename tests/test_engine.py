@@ -226,6 +226,82 @@ def test_reoptimize_charges_each_tier_change_at_most_once():
     assert total_paid == pytest.approx(mig1.total_move_cents)
 
 
+def test_reoptimize_accepts_per_partition_months_held():
+    """Heterogeneous residency clocks: each partition's early-delete penalty
+    is prorated by its own hold — the scalar path would mis-price both."""
+    import dataclasses as dc
+    from repro.core.engine import PlacementEngine, PlacementProblem
+    table = azure_table()
+    cfg = ScopeConfig(tier_whitelist=(1, 2), schemes=("none",))
+    eng = PlacementEngine(table, cfg)
+    prob = PlacementProblem(
+        spans_gb=np.array([1.0, 1.0]), rho=np.array([0.1, 0.1]),
+        current_tier=np.full(2, -1), R=np.ones((2, 1)), D=np.zeros((2, 1)),
+        schemes=("none",), table=table, cfg=cfg)
+    plan = eng.solve(prob)
+    assert (plan.assignment.tier == 2).all()      # both land on Cool
+    hot = np.array([500.0, 500.0])
+    held = np.array([0.25, 0.9])                  # placed at different times
+    mig = eng.reoptimize(plan, hot, months_held=held)
+    assert mig.moved.all() and (mig.new_tier == 1).all()
+    expect = sum(1.0 * table.storage_cents_gb_month[2] * (1.0 - h)
+                 for h in held)
+    assert mig.penalty_cents == pytest.approx(expect, rel=1e-12)
+    # the scalar path prices BOTH partitions at the youngest clock
+    mig_scalar = eng.reoptimize(plan, hot, months_held=0.25)
+    assert mig_scalar.penalty_cents == pytest.approx(
+        2 * 1.0 * table.storage_cents_gb_month[2] * 0.75, rel=1e-12)
+    assert mig_scalar.penalty_cents > mig.penalty_cents
+    with pytest.raises(ValueError):
+        eng.reoptimize(plan, hot, months_held=np.array([0.25, 0.5, 0.75]))
+
+
+def test_drift_gate_absolute_floor():
+    from repro.core.engine import drift_gate
+    rho_ref = np.array([0.0, 10.0, 10.0])
+    rho = np.array([1e-6, 10.1, 20.0])
+    # without the floor, a cold partition drifts on an epsilon access
+    np.testing.assert_array_equal(
+        drift_gate(rho, rho_ref, 0.25), [True, False, True])
+    np.testing.assert_array_equal(
+        drift_gate(rho, rho_ref, 0.25, rho_abs_tol=0.5),
+        [False, False, True])
+    # the floor composes with (never weakens) the relative band
+    np.testing.assert_array_equal(
+        drift_gate(rho, rho_ref, 0.25, rho_abs_tol=20.0),
+        [False, False, False])
+
+
+def test_rho_abs_tol_keeps_cold_partitions_scheme_locked():
+    """A cold partition (rho_ref == 0) receiving an epsilon access must not
+    lose its scheme lock when rho_abs_tol is set; with a zero floor the
+    relative gate alone lets it churn."""
+    import dataclasses as dc
+    from repro.core.engine import PlacementEngine, PlacementProblem, \
+        PlacementPlan
+    table = azure_table()
+    cfg = ScopeConfig(tier_whitelist=(1,), schemes=("none", "lz4"),
+                      months=2.0)
+    eng = PlacementEngine(table, cfg)
+    prob = PlacementProblem(
+        spans_gb=np.array([1.0, 1.0]), rho=np.array([0.0, 50.0]),
+        current_tier=np.full(2, -1), R=np.ones((2, 2)), D=np.zeros((2, 2)),
+        schemes=("none", "lz4"), table=table, cfg=cfg)
+    plan = eng.solve(prob)
+    assert (plan.assignment.scheme == 0).all()    # tie -> first scheme
+    # the predictor later learns lz4 compresses 5x: re-encoding now pays,
+    # but only unlocked partitions may take it
+    better = dc.replace(prob, R=np.array([[1.0, 5.0], [1.0, 5.0]]))
+    plan2 = PlacementPlan(better, plan.assignment, plan.report)
+    eps = np.array([1e-6, 50.0])
+    unlocked = eng.reoptimize(plan2, eps, rho_rel_tol=0.25, rho_abs_tol=0.0)
+    assert unlocked.moved[0] and unlocked.new_scheme[0] == 1
+    assert not unlocked.moved[1]                  # undrifted stays locked
+    locked = eng.reoptimize(plan2, eps, rho_rel_tol=0.25, rho_abs_tol=1e-3)
+    assert locked.n_moved == 0 and locked.migration_cents == 0.0
+    assert (locked.new_scheme == 0).all()
+
+
 def test_billing_stage_matches_legacy_loop_random_assignments():
     eng, plan = _synthetic_plan()
     problem = plan.problem

@@ -213,6 +213,103 @@ def test_compredict_rd_fn_caches_surviving_partitions(monkeypatch):
     assert len(calls) == 1                   # identical batch: pure cache hit
 
 
+def _two_provider_table():
+    """Hand-built 2-provider space where hot data belongs on provider A
+    (cheap reads) and cold data on provider B (cheap storage), with real
+    egress — forces a provider move on a hot->cold drift."""
+    from repro.core.costs import ProviderCostTable, CostTable, \
+        multi_cloud_table
+
+    def one_tier(storage, read, egress):
+        return ProviderCostTable(
+            provider=f"p{storage}", egress_out_cents_gb=egress,
+            table=CostTable(
+                storage_cents_gb_month=np.array([storage]),
+                read_cents_gb=np.array([read]),
+                write_cents_gb=np.array([0.01]),
+                ttfb_seconds=np.array([0.02]),
+                capacity_gb=np.array([np.inf]),
+                early_delete_months=np.array([0.0]),
+                names=("only",)))
+    return multi_cloud_table([one_tier(10.0, 0.01, 0.5),
+                              one_tier(1.0, 5.0, 0.5)])
+
+
+def test_empty_batch_after_provider_move_reports_zero_egress():
+    """Regression (ISSUE 5): the empty-stream step must construct the same
+    StreamStepReport / MigrationPlan field set as the live path — in
+    particular an explicit ``egress_cents == 0.0`` right after a provider
+    move, not a missing/defaulted field."""
+    import dataclasses
+    table = _two_provider_table()
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    sizes = {"d0/0": 1.0, "d0/1": 1.0}
+    eng = StreamingEngine(table, cfg, sizes, s_thresh=5.0, window=1,
+                          drift_threshold=0.5)
+    eng.ingest_and_reoptimize([(("d0/0", "d0/1"), 100.0)])
+    mig = eng.ingest_and_reoptimize([(("d0/0", "d0/1"), 0.001)])
+    assert mig.n_moved == 1 and mig.egress_cents > 0.0  # provider move paid
+    live = eng.history[-1]
+    # empty batches expire the window; compaction drops the dead partition
+    eng.ingest_and_reoptimize([])
+    empty_mig = eng.ingest_and_reoptimize([])
+    assert empty_mig.plan.problem.n == 0
+    rep = eng.history[-1]
+    assert rep.n_partitions == 0
+    assert rep.egress_cents == 0.0 and rep.migration_cents == 0.0
+    # field-set parity with the live path (no defaulted/missing fields)
+    assert set(dataclasses.asdict(rep)) == set(dataclasses.asdict(live))
+    # the empty MigrationPlan carries the live path's arrays too
+    for arr in (empty_mig.candidate, empty_mig.move_transfer_cents,
+                empty_mig.move_egress_cents, empty_mig.move_penalty_cents,
+                empty_mig.old_stored_gb):
+        assert arr is not None and arr.shape == (0,)
+    assert empty_mig.select(np.zeros(0, bool)) is empty_mig
+
+
+def test_select_moves_defers_and_reproposes_next_batch():
+    """A partial step keeps deferred candidates at their old placement,
+    charges nothing for them, and re-proposes them next batch."""
+    eng, _ = _engine(window=1, drift_threshold=np.inf)
+    eng.ingest_and_reoptimize(_hot_cold_batch())
+    drifted = _hot_cold_batch(hot=400.0, cold=500.0)
+    mig = eng.ingest_and_reoptimize(
+        drifted, select_moves=lambda m: np.zeros(m.plan.problem.n, bool))
+    assert mig.n_candidates >= 1 and mig.n_moved == 0
+    assert mig.migration_cents == 0.0 and mig.penalty_cents == 0.0
+    assert np.array_equal(mig.new_tier, mig.old_tier)
+    assert eng.history[-1].n_deferred == mig.n_candidates
+    # deferred moves stay drifted (lock base kept) and execute next batch
+    mig2 = eng.ingest_and_reoptimize(drifted)
+    assert mig2.n_moved == mig.n_candidates
+    assert eng.history[-1].n_deferred == 0
+
+
+def test_stream_rho_abs_tol_stabilizes_cold_lock():
+    """Epsilon accesses on a cold partition must not reset its drift-lock
+    base when the absolute floor is set; without the floor every epsilon
+    batch re-bases the lock (the scheme lock is defeated)."""
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    sizes = {f"d{i}/{j}": 0.5 + 0.1 * j for i in range(6) for j in range(4)}
+    cold_files = frozenset({"d1/0", "d1/1", "d1/2"})
+
+    def run(abs_tol):
+        eng = StreamingEngine(azure_table(), cfg, sizes, s_thresh=5.0,
+                              window=1, drift_threshold=np.inf,
+                              rho_abs_tol=abs_tol)
+        eng.ingest_and_reoptimize(_hot_cold_batch(cold=0.0))
+        refs = []
+        for eps in (1e-6, 3e-6, 2e-6):
+            eng.ingest_and_reoptimize(_hot_cold_batch(cold=eps))
+            refs.append(eng._held[cold_files][0].rho_ref)
+        return refs
+
+    # floor on: the lock base never re-bases off the original cold rate
+    assert run(0.5) == [0.0, 0.0, 0.0]
+    # floor off: every epsilon batch counts as drift and re-bases the lock
+    assert all(r > 0.0 for r in run(0.0))
+
+
 def test_sync_plan_requires_partitions_and_payloads():
     eng, _ = _engine()
     mig = eng.ingest_and_reoptimize(_hot_cold_batch())

@@ -20,6 +20,7 @@ MODULES = [
     ("stream", "benchmarks.bench_stream"),
     ("daemon", "benchmarks.bench_daemon"),
     ("multicloud", "benchmarks.bench_multicloud"),
+    ("fleet", "benchmarks.bench_fleet"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

@@ -102,12 +102,23 @@ class ProviderCostTable:
     cloud. ``capacity_gb`` caps the provider's total footprint across all of
     its tiers (np.inf = unbounded); it becomes a group constraint row in the
     capacitated solver.
+
+    ``region`` models one provider deployed in several regions: build one
+    ``ProviderCostTable`` per region with the SAME ``provider`` name and
+    distinct regions. Moves between two regions of one provider then
+    default to the *reduced* intra-provider rate
+    ``region_egress_out_cents_gb`` (inter-region transfer is far cheaper
+    than internet egress) instead of the full cross-cloud rate; moves
+    within one region stay free. With ``region=None`` (the default)
+    nothing changes — single-region tables are bit-identical to before.
     """
 
     provider: str
     table: CostTable
     egress_out_cents_gb: float = 0.0
     capacity_gb: float = np.inf
+    region: Optional[str] = None
+    region_egress_out_cents_gb: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +141,7 @@ class MultiCloudCostTable(CostTable):
     provider_of_tier: Optional[np.ndarray] = None    # (L,) int
     egress_cents_gb: Optional[np.ndarray] = None     # (P,P), zero diagonal
     provider_capacity_gb: Optional[np.ndarray] = None  # (P,)
+    provider_regions: Optional[Tuple] = None         # (P,) region or None
 
     @property
     def num_providers(self) -> int:
@@ -157,10 +169,14 @@ def multi_cloud_table(providers: Sequence[ProviderCostTable],
 
     ``egress_cents_gb`` overrides the (P,P) egress matrix; by default row i
     is ``providers[i].egress_out_cents_gb`` everywhere off the diagonal
-    (cross-cloud transfer is billed by the source as internet egress). The
-    diagonal is always forced to zero — moving within a provider pays no
-    egress. ``compute_cents_sec`` is taken from the first provider (the
-    paper's C^c is a property of where decompression runs, not of storage).
+    (cross-cloud transfer is billed by the source as internet egress),
+    except between two entries that carry the SAME provider name and
+    distinct (non-None) ``region`` fields — those intra-provider
+    cross-region lanes price the source's reduced
+    ``region_egress_out_cents_gb`` instead. The diagonal is always forced
+    to zero — moving within one (provider, region) pays no egress.
+    ``compute_cents_sec`` is taken from the first provider (the paper's
+    C^c is a property of where decompression runs, not of storage).
     """
     if not providers:
         raise ValueError("need at least one provider")
@@ -168,6 +184,12 @@ def multi_cloud_table(providers: Sequence[ProviderCostTable],
     if egress_cents_gb is None:
         out = np.array([p.egress_out_cents_gb for p in providers])
         egress = np.repeat(out[:, None], P, axis=1)
+        for i, pi in enumerate(providers):
+            for j, pj in enumerate(providers):
+                if (i != j and pi.provider == pj.provider
+                        and pi.region is not None and pj.region is not None):
+                    egress[i, j] = (pi.region_egress_out_cents_gb
+                                    if pi.region != pj.region else 0.0)
     else:
         egress = np.array(egress_cents_gb, np.float64, copy=True)
         if egress.shape != (P, P):
@@ -184,7 +206,8 @@ def multi_cloud_table(providers: Sequence[ProviderCostTable],
         capacity_gb=cat("capacity_gb"),
         early_delete_months=cat("early_delete_months"),
         compute_cents_sec=tabs[0].compute_cents_sec,
-        names=tuple(f"{p.provider}:{n}" for p in providers
+        names=tuple((f"{p.provider}@{p.region}:{n}" if p.region is not None
+                     else f"{p.provider}:{n}") for p in providers
                     for n in p.table.names),
         provider_names=tuple(p.provider for p in providers),
         provider_of_tier=np.concatenate(
@@ -192,6 +215,7 @@ def multi_cloud_table(providers: Sequence[ProviderCostTable],
         egress_cents_gb=egress,
         provider_capacity_gb=np.array([p.capacity_gb for p in providers],
                                       np.float64),
+        provider_regions=tuple(p.region for p in providers),
     )
 
 

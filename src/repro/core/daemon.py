@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core.engine import (MigrationPlan, PlacementEngine, PlacementPlan,
                                StreamingEngine, drift_gate)
+from repro.core.fleet import FleetEngine
 from repro.core.optassign import budgeted_moves
 from repro.core.stream import occurrence_keys
 
@@ -89,6 +90,9 @@ class DaemonCycleReport:
     moved_gb: float                   # stored bytes that left their cell
     steady_cents: float               # steady-state bill of the cycle's plan
     max_deferral_age: int             # oldest pending deferral, in cycles
+    n_tenants: int = 1                # > 1 only in fleet mode
+    installment_cents: float = 0.0    # banked toward oversized moves this cycle
+    prepaid_used_cents: float = 0.0   # prior installments consumed by landings
 
 
 def linear_trend_forecast(history: Sequence, horizon: float = 1.0,
@@ -116,7 +120,7 @@ class ReoptimizationDaemon:
     """Drives ``reoptimize`` / ``ingest_and_reoptimize`` in a cycle loop
     with budget-capped, hysteresis-guarded migrations.
 
-    Two modes, chosen by the engine handed in:
+    Three modes, chosen by the engine handed in:
 
     * **batch** — ``ReoptimizationDaemon(placement_engine, plan=plan0)``;
       each :meth:`step` takes the cycle's observed (N,) rho vector. The
@@ -127,6 +131,20 @@ class ReoptimizationDaemon:
       from the streaming engine itself (``rho_rel_tol`` / ``rho_abs_tol``
       constructor args); deferral ages are keyed by partition file-set
       identity so they survive re-partitioning.
+    * **fleet** — ``ReoptimizationDaemon(fleet_engine, plans=[...])``;
+      each :meth:`step` takes a list of per-tenant rho vectors. All
+      tenants' migration solves run in ONE batched assignment dispatch
+      and the budget knapsack runs ONCE over the concatenated candidate
+      moves — the per-cycle budget is shared fleet-wide. With an
+      unbounded budget every tenant's trajectory is bit-identical to its
+      own batch-mode daemon.
+
+    ``amortize_oversized=True`` (batch mode) splits a move whose charge
+    exceeds the whole per-cycle cents cap across cycles: leftover budget
+    is banked into the best such move each cycle (report field
+    ``installment_cents``) until its residual charge fits the cap and it
+    lands (consuming ``prepaid_used_cents``). Without it such a move is
+    deferred forever.
 
     ``budget=None`` (or an all-inf :class:`MigrationBudget`) reproduces the
     underlying engine's results bit-for-bit. ``store=`` mirrors every
@@ -136,8 +154,9 @@ class ReoptimizationDaemon:
     mode calls ``store.sync_plan`` with payloads from ``payload_fn``.
     """
 
-    def __init__(self, engine: "PlacementEngine | StreamingEngine",
+    def __init__(self, engine: "PlacementEngine | StreamingEngine | FleetEngine",
                  plan: Optional[PlacementPlan] = None, *,
+                 plans: Optional[Sequence[PlacementPlan]] = None,
                  budget: Optional[MigrationBudget] = None,
                  rho_rel_tol: Optional[float] = None,
                  rho_abs_tol: Optional[float] = None,
@@ -145,24 +164,51 @@ class ReoptimizationDaemon:
                  horizon_months: Optional[float] = None,
                  min_stay_defer: bool = True,
                  selection: str = "auto",
+                 amortize_oversized: bool = False,
                  forecast_fn: Optional[Callable] = None,
                  forecast_window: int = 6,
                  store=None, store_keys: Optional[list] = None,
                  payload_fn: Optional[Callable] = None):
         self.streaming = isinstance(engine, StreamingEngine)
+        self.fleet = isinstance(engine, FleetEngine)
         self.engine = engine
         self.budget = budget or MigrationBudget()
         self.aging = float(aging)
         self.horizon_months = horizon_months
         self.min_stay_defer = min_stay_defer
         self.selection = selection
+        self.amortize_oversized = amortize_oversized
         self.forecast_fn = forecast_fn
         self.forecast_window = int(forecast_window)
         self.store = store
         self.store_keys = store_keys
         self.payload_fn = payload_fn
         self.history: List[DaemonCycleReport] = []
-        if self.streaming:
+        if plans is not None and not self.fleet:
+            raise ValueError("plans= is fleet mode — hand the daemon a "
+                             "FleetEngine (single-tenant modes take plan=)")
+        if amortize_oversized and (self.streaming or self.fleet):
+            raise ValueError("amortize_oversized is batch-mode only")
+        if self.fleet:
+            if plan is not None:
+                raise ValueError("fleet mode takes plans= (one per tenant), "
+                                 "not plan=")
+            if plans is None:
+                raise ValueError("fleet mode needs the initial per-tenant "
+                                 "PlacementPlans (plans=)")
+            if store is not None:
+                raise ValueError("store mirroring is single-tenant; attach "
+                                 "stores outside the fleet daemon")
+            self.plans: List[PlacementPlan] = list(plans)
+            self.rho_rel_tol = 0.25 if rho_rel_tol is None else rho_rel_tol
+            self.rho_abs_tol = 0.0 if rho_abs_tol is None else rho_abs_tol
+            self._months_held_f = [np.zeros(p.problem.n) for p in self.plans]
+            self._age_f = [np.zeros(p.problem.n, int) for p in self.plans]
+            self._rho_ref_f = [np.asarray(p.problem.rho, np.float64).copy()
+                               for p in self.plans]
+            self._hist_f = [collections.deque(maxlen=self.forecast_window)
+                            for _ in self.plans]
+        elif self.streaming:
             if plan is not None:
                 raise ValueError("streaming mode derives its plan from the "
                                  "engine; don't pass plan=")
@@ -189,30 +235,65 @@ class ReoptimizationDaemon:
             self._rho_ref = np.asarray(plan.problem.rho, np.float64).copy()
             self._batch_hist: collections.deque = collections.deque(
                 maxlen=self.forecast_window)
+            # amortized move-splitting ledger: cents already banked toward
+            # each partition's (oversized) pending move
+            self._paid = np.zeros(n)
 
     # ---------------------------------------------------------- selection
-    def _choose(self, mig: MigrationPlan, ages: np.ndarray) -> np.ndarray:
-        """Budget knapsack over the candidate moves (all-True when the
-        budget is unbounded — the parity fast path)."""
-        cand = mig.candidate
-        if not self.budget.finite or not cand.any():
-            return np.ones(cand.shape[0], bool)
+    def _terms(self, mig: MigrationPlan) -> Tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray]:
+        """(savings, charge, eligible) knapsack inputs for one plan's moves."""
         savings = mig.steady_savings_cents(self.horizon_months)
         charge = (mig.move_transfer_cents + mig.move_egress_cents
                   + mig.move_penalty_cents)
-        eligible = cand.copy()
+        eligible = mig.candidate.copy()
         if self.min_stay_defer:
             # postpone while the early-delete penalty still exceeds the
             # projected steady-state savings — the clock only helps: the
             # penalty prorates away while savings stay put
             eligible &= ~(mig.move_penalty_cents
                           > np.maximum(savings, 0.0) + 1e-12)
+        return savings, charge, eligible
+
+    def _choose(self, mig: MigrationPlan, ages: np.ndarray,
+                paid: Optional[np.ndarray] = None) -> np.ndarray:
+        """Budget knapsack over the candidate moves (all-True when the
+        budget is unbounded — the parity fast path)."""
+        cand = mig.candidate
+        if not self.budget.finite or not cand.any():
+            return np.ones(cand.shape[0], bool)
+        savings, charge, eligible = self._terms(mig)
         return budgeted_moves(
             savings, charge, self.budget.cents_per_cycle,
             candidates=eligible, move_gb=mig.old_stored_gb,
             budget_gb=self.budget.gb_per_cycle,
             priority=1.0 + self.aging * np.maximum(ages, 0),
+            method=self.selection, paid_cents=paid)
+
+    def _choose_fleet(self, migs: List[MigrationPlan]) -> List[np.ndarray]:
+        """ONE knapsack over the concatenated candidate moves of every
+        tenant — the per-cycle budget is shared fleet-wide, so a cent spent
+        on tenant A's move is a cent unavailable to tenant B."""
+        sizes = [m.candidate.shape[0] for m in migs]
+        if not self.budget.finite or not any(
+                m.candidate.any() for m in migs):
+            return [np.ones(s, bool) for s in sizes]
+        terms = [self._terms(m) for m in migs]
+        keep = budgeted_moves(
+            np.concatenate([t[0] for t in terms]) if sizes else np.zeros(0),
+            np.concatenate([t[1] for t in terms]),
+            self.budget.cents_per_cycle,
+            candidates=np.concatenate([t[2] for t in terms]),
+            move_gb=np.concatenate([m.old_stored_gb for m in migs]),
+            budget_gb=self.budget.gb_per_cycle,
+            priority=1.0 + self.aging * np.concatenate(
+                [np.maximum(a, 0) for a in self._age_f]),
             method=self.selection)
+        out, off = [], 0
+        for s in sizes:
+            out.append(keep[off:off + s])
+            off += s
+        return out
 
     @staticmethod
     def _spent(mig: MigrationPlan) -> Tuple[float, float, float, float]:
@@ -226,9 +307,12 @@ class ReoptimizationDaemon:
 
     # ------------------------------------------------------------- cycles
     def step(self, observed, months: float = 1.0) -> DaemonCycleReport:
-        """Run one cycle. ``observed`` is the (N,) rho vector (batch mode)
-        or the query-family batch (streaming mode); ``months`` is the
-        logical time elapsed since the previous cycle."""
+        """Run one cycle. ``observed`` is the (N,) rho vector (batch mode),
+        the query-family batch (streaming mode), or a list of per-tenant
+        rho vectors (fleet mode); ``months`` is the logical time elapsed
+        since the previous cycle."""
+        if self.fleet:
+            return self._step_fleet(list(observed), months)
         if self.streaming:
             return self._step_stream(observed, months)
         return self._step_batch(np.asarray(observed, np.float64), months)
@@ -247,12 +331,41 @@ class ReoptimizationDaemon:
                           np.float64)
                if self.forecast_fn is not None else rho_obs)
         held = self._months_held + months
-        mig = self.engine.reoptimize(
+        full = self.engine.reoptimize(
             self.plan, rho, months_held=held,
             rho_rel_tol=self.rho_rel_tol, rho_abs_tol=self.rho_abs_tol,
             rho_ref=self._rho_ref)
-        keep = self._choose(mig, self._age_arr)
-        mig = mig.select(keep)
+        paid = self._paid if self.amortize_oversized else None
+        keep = self._choose(full, self._age_arr, paid=paid)
+        mig = full.select(keep)
+
+        installment = prepaid_used = 0.0
+        if self.amortize_oversized and self.budget.finite \
+                and np.isfinite(self.budget.cents_per_cycle):
+            _, charge, eligible = self._terms(full)
+            residual = np.maximum(charge - self._paid, 0.0)
+            # landed moves consume their banked credit; the budget charged
+            # this cycle was only the residual (budgeted_moves weighed it)
+            prepaid_used = float(np.minimum(
+                self._paid, charge)[mig.moved].sum())
+            self._paid[mig.moved] = 0.0
+            # bank the cycle's leftover budget into the best oversized move
+            # — one whose residual charge exceeds the whole per-cycle cap,
+            # so it could never land outright
+            spent = float(residual[mig.moved].sum())
+            left = self.budget.cents_per_cycle - spent
+            over = eligible & ~keep & (residual
+                                       > self.budget.cents_per_cycle)
+            if left > 1e-9 and over.any():
+                savings = full.steady_savings_cents(self.horizon_months)
+                rank = np.where(
+                    over,
+                    (1.0 + self.aging * np.maximum(self._age_arr, 0))
+                    * np.maximum(savings, 1e-9) / np.maximum(residual, 1e-9),
+                    -np.inf)
+                n = int(rank.argmax())
+                installment = float(min(left, residual[n]))
+                self._paid[n] += installment
 
         self._months_held = np.where(mig.moved, 0.0, held)
         deferred = mig.deferred
@@ -270,7 +383,70 @@ class ReoptimizationDaemon:
             self.store.migrate(mig, self.store_keys)
         return self._report(mig, deferred,
                             int(self._age_arr.max()) if deferred.any()
-                            else 0)
+                            else 0, installment_cents=installment,
+                            prepaid_used_cents=prepaid_used)
+
+    # ------------------------------------------------------------ fleet mode
+    def _step_fleet(self, rho_obs: List[np.ndarray], months: float,
+                    ) -> DaemonCycleReport:
+        """One fleet cycle: T migration solves in one batched assignment
+        dispatch, then ONE shared-budget knapsack over every tenant's
+        candidate moves. With an unbounded budget each tenant's trajectory
+        is bit-identical to its own batch-mode daemon (the fleet parity
+        contract)."""
+        T = len(self.plans)
+        if len(rho_obs) != T:
+            raise ValueError(f"fleet step expects {T} rho vectors, "
+                             f"got {len(rho_obs)}")
+        rhos = []
+        for t in range(T):
+            obs = np.asarray(rho_obs[t], np.float64)
+            self._hist_f[t].append(obs)
+            rhos.append(np.asarray(
+                self.forecast_fn(list(self._hist_f[t])), np.float64)
+                if self.forecast_fn is not None else obs)
+        held = [mh + months for mh in self._months_held_f]
+        migs, _ = self.engine.reoptimize(
+            self.plans, rhos, months_held=held,
+            rho_rel_tol=self.rho_rel_tol, rho_abs_tol=self.rho_abs_tol,
+            rho_refs=self._rho_ref_f)
+        keeps = self._choose_fleet(migs)
+        migs = [m.select(k) for m, k in zip(migs, keeps)]
+
+        max_age = 0
+        for t, mig in enumerate(migs):
+            self._months_held_f[t] = np.where(mig.moved, 0.0, held[t])
+            deferred = mig.deferred
+            self._age_f[t] = np.where(deferred, self._age_f[t] + 1, 0)
+            drifted = drift_gate(rhos[t], self._rho_ref_f[t],
+                                 self.rho_rel_tol, self.rho_abs_tol)
+            self._rho_ref_f[t] = np.where(
+                ~mig.moved & (~drifted | deferred),
+                self._rho_ref_f[t], rhos[t])
+            self.plans[t] = mig.plan
+            if deferred.any():
+                max_age = max(max_age, int(self._age_f[t].max()))
+
+        spent = [self._spent(m) for m in migs]
+        transfer = sum(s[0] for s in spent)
+        egress = sum(s[1] for s in spent)
+        penalty = sum(s[2] for s in spent)
+        gb = sum(s[3] for s in spent)
+        deferreds = [m.deferred for m in migs]
+        rep = DaemonCycleReport(
+            cycle=len(self.history),
+            n_partitions=sum(m.plan.problem.n for m in migs),
+            n_candidates=sum(m.n_candidates for m in migs),
+            n_selected=sum(m.n_moved for m in migs),
+            n_deferred=int(sum(d.sum() for d in deferreds)),
+            migration_cents=transfer, egress_cents=egress,
+            penalty_cents=penalty,
+            spent_cents=transfer + egress + penalty, moved_gb=gb,
+            steady_cents=float(sum(m.plan.report.total_cents
+                                   for m in migs)),
+            max_deferral_age=max_age, n_tenants=T)
+        self.history.append(rep)
+        return rep
 
     # ------------------------------------------------------ streaming mode
     def _project_stream(self, parts, rho_obs: np.ndarray) -> np.ndarray:
@@ -316,7 +492,8 @@ class ReoptimizationDaemon:
 
     # ------------------------------------------------------------- report
     def _report(self, mig: MigrationPlan, deferred: np.ndarray,
-                max_age: int) -> DaemonCycleReport:
+                max_age: int, installment_cents: float = 0.0,
+                prepaid_used_cents: float = 0.0) -> DaemonCycleReport:
         transfer, egress, penalty, gb = self._spent(mig)
         rep = DaemonCycleReport(
             cycle=len(self.history),
@@ -327,6 +504,8 @@ class ReoptimizationDaemon:
             penalty_cents=penalty,
             spent_cents=transfer + egress + penalty,
             moved_gb=gb, steady_cents=mig.plan.report.total_cents,
-            max_deferral_age=max_age)
+            max_deferral_age=max_age,
+            installment_cents=installment_cents,
+            prepaid_used_cents=prepaid_used_cents)
         self.history.append(rep)
         return rep

@@ -403,24 +403,41 @@ class AssignStage:
             feas = lock_schemes(feas, locked_scheme)
         return cost, feas
 
-    def __call__(self, problem: PlacementProblem,
-                 extra_cost: Optional[np.ndarray] = None,
-                 locked_scheme: Optional[np.ndarray] = None) -> Assignment:
+    def solver_inputs(
+        self, problem: PlacementProblem,
+        extra_cost: Optional[np.ndarray] = None,
+        locked_scheme: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Optional[np.ndarray],
+               Optional[np.ndarray], Optional[np.ndarray]]:
+        """``(cost, feas, stored, cap, tier_groups, group_capacity_gb)``
+        exactly as :meth:`__call__` hands them to the solver. ``cap`` is
+        None when the config sets no per-tier capacities; the group fields
+        are None unless the table carries finite provider capacities. The
+        fleet path (:class:`repro.core.fleet.FleetEngine`) batches these
+        per-tenant tuples into one ``capacitated_assign_batch`` dispatch."""
         cost, feas = self.cost_and_feasibility(problem, extra_cost,
                                                locked_scheme)
         # Multi-cloud tables carry per-provider capacity totals; finite ones
         # become group constraint rows in the capacitated solver.
         gcap = getattr(self.table, "provider_capacity_gb", None)
         has_gcap = gcap is not None and bool(np.isfinite(gcap).any())
-        if self.cfg.capacity_gb is None and not has_gcap:
-            return greedy_assign(cost, feas)
         cap = (np.asarray(self.cfg.capacity_gb, np.float64)
-               if self.cfg.capacity_gb is not None
-               else np.full(self.table.num_tiers, np.inf))
-        return capacitated_assign(
-            cost, feas, problem.stored_matrix(), cap,
-            tier_groups=self.table.provider_of_tier if has_gcap else None,
-            group_capacity_gb=gcap if has_gcap else None)
+               if self.cfg.capacity_gb is not None else None)
+        return (cost, feas, problem.stored_matrix(), cap,
+                self.table.provider_of_tier if has_gcap else None,
+                gcap if has_gcap else None)
+
+    def __call__(self, problem: PlacementProblem,
+                 extra_cost: Optional[np.ndarray] = None,
+                 locked_scheme: Optional[np.ndarray] = None) -> Assignment:
+        cost, feas, stored, cap, tg, gcap = self.solver_inputs(
+            problem, extra_cost, locked_scheme)
+        if cap is None and tg is None:
+            return greedy_assign(cost, feas)
+        if cap is None:
+            cap = np.full(self.table.num_tiers, np.inf)
+        return capacitated_assign(cost, feas, stored, cap, tier_groups=tg,
+                                  group_capacity_gb=gcap)
 
 
 class BillingStage:
@@ -534,19 +551,19 @@ class PlacementEngine:
                                      rho_rel_tol, ref,
                                      rho_abs_tol=rho_abs_tol)
 
-    def _solve_migration(self, problem2: PlacementProblem,
+    def _migration_terms(self, problem2: PlacementProblem,
                          cur_l: np.ndarray, cur_k: np.ndarray,
                          old_stored: np.ndarray,
                          months_held: "float | np.ndarray",
                          lock_unchanged: bool, rho_rel_tol: float,
-                         rho_ref: np.ndarray,
-                         rho_abs_tol: float = 0.0) -> MigrationPlan:
-        """Shared migration core for :meth:`reoptimize` and the streaming
-        engine. ``cur_l``/``cur_k`` may contain -1 for partitions that are
-        new to the placement (no penalty, no transfer — pure ingestion via
-        the cost tensor's Delta_{-1,l} row); ``rho_ref`` is the access rate
-        each partition's current scheme was chosen under (drift-lock base).
-        """
+                         rho_ref: np.ndarray, rho_abs_tol: float = 0.0,
+                         ) -> Tuple[np.ndarray, Optional[np.ndarray],
+                                    np.ndarray]:
+        """Everything that precedes the assignment dispatch of a migration
+        solve: the ``(extra_cost, locked_scheme, penalty_cents_n)`` triple.
+        Split out so the fleet path can build per-tenant terms, batch the
+        assignment, and finish with :meth:`_finalize_migration` — the same
+        three steps :meth:`_solve_migration` runs for one tenant."""
         table = self.table
         L = table.num_tiers
         K = len(problem2.schemes)
@@ -588,9 +605,16 @@ class PlacementEngine:
             extra = extra + self.cfg.weights.gamma * (
                 eg_nl[:, :, None]
                 * (old_stored[:, None, None] - new_stored_nk[:, None, :]))
+        return extra, locked, penalty_cents_n
 
-        assignment = self.assign(problem2, extra_cost=extra,
-                                 locked_scheme=locked)
+    def _finalize_migration(self, problem2: PlacementProblem,
+                            assignment: Assignment,
+                            cur_l: np.ndarray, cur_k: np.ndarray,
+                            old_stored: np.ndarray,
+                            penalty_cents_n: np.ndarray) -> MigrationPlan:
+        """Billing + per-move cents bookkeeping after the assignment solve."""
+        table = self.table
+        safe_l = np.maximum(cur_l, 0)
         report = self.billing(problem2, assignment)
         new_plan = PlacementPlan(problem2, assignment, report)
 
@@ -622,6 +646,27 @@ class PlacementEngine:
             move_transfer_cents=transfer_n, move_egress_cents=egress_n,
             move_penalty_cents=pen_n,
             old_stored_gb=np.asarray(old_stored, np.float64))
+
+    def _solve_migration(self, problem2: PlacementProblem,
+                         cur_l: np.ndarray, cur_k: np.ndarray,
+                         old_stored: np.ndarray,
+                         months_held: "float | np.ndarray",
+                         lock_unchanged: bool, rho_rel_tol: float,
+                         rho_ref: np.ndarray,
+                         rho_abs_tol: float = 0.0) -> MigrationPlan:
+        """Shared migration core for :meth:`reoptimize` and the streaming
+        engine. ``cur_l``/``cur_k`` may contain -1 for partitions that are
+        new to the placement (no penalty, no transfer — pure ingestion via
+        the cost tensor's Delta_{-1,l} row); ``rho_ref`` is the access rate
+        each partition's current scheme was chosen under (drift-lock base).
+        """
+        extra, locked, penalty_cents_n = self._migration_terms(
+            problem2, cur_l, cur_k, old_stored, months_held, lock_unchanged,
+            rho_rel_tol, rho_ref, rho_abs_tol)
+        assignment = self.assign(problem2, extra_cost=extra,
+                                 locked_scheme=locked)
+        return self._finalize_migration(problem2, assignment, cur_l, cur_k,
+                                        old_stored, penalty_cents_n)
 
 
 # --------------------------------------------------------------- streaming

@@ -409,3 +409,67 @@ def test_daemon_reports_are_dataclasses_with_stable_fields():
     assert rep.cycle == 0 and rep.n_partitions > 0
     assert rep.spent_cents == pytest.approx(
         rep.migration_cents + rep.egress_cents + rep.penalty_cents)
+
+
+# ------------------------------------------------- amortized move-splitting
+def test_budgeted_moves_paid_cents_reduces_residual_charge():
+    savings = np.array([10.0, 8.0])
+    cents = np.array([7.0, 7.0])
+    # neither move fits a 4c cap cold...
+    keep = budgeted_moves(savings, cents, 4.0)
+    assert not keep.any()
+    # ...but with 5c prepaid on move 0 its residual (2c) fits
+    keep = budgeted_moves(savings, cents, 4.0,
+                          paid_cents=np.array([5.0, 0.0]))
+    assert keep[0] and not keep[1]
+    # over-payment clamps at zero residual, never a negative charge that
+    # would free budget for other moves
+    keep = budgeted_moves(savings, cents, 4.0,
+                          paid_cents=np.array([9.0, 0.0]))
+    assert keep[0] and not keep[1]
+    # residuals that jointly fit both land
+    keep = budgeted_moves(savings, cents, 4.0,
+                          paid_cents=np.array([5.0, 5.0]))
+    assert keep.all()
+
+
+def test_batch_daemon_amortizes_oversized_moves_until_they_land():
+    """A cap below every single move's charge starves the plain daemon
+    forever; with amortize_oversized the daemon banks installments each
+    cycle and the moves eventually land. Budget invariant per cycle:
+    real spend (spent - prepaid consumed) + installment <= cap."""
+    eng, plan0, drifts = _batch_setup()
+    mig0 = eng.reoptimize(plan0, drifts[0], months_held=1.0)
+    charges = (mig0.move_transfer_cents + mig0.move_egress_cents
+               + mig0.move_penalty_cents)[mig0.moved]
+    assert charges.size >= 2
+    cap = float(charges.max()) / 3.5      # smaller than ANY move's charge
+    assert cap < float(charges.min()) or cap < float(charges.max())
+    cycles = [drifts[0]] * 12
+
+    plain = ReoptimizationDaemon(eng, plan=plan0,
+                                 budget=MigrationBudget(cents_per_cycle=cap))
+    plain_reps = plain.run(cycles, months=1.0)
+    stuck = [r for r in plain_reps
+             if r.n_deferred > 0 and r.n_selected == 0]
+    assert len(stuck) >= 2          # oversized moves starve without amortize
+
+    d = ReoptimizationDaemon(eng, plan=plan0, amortize_oversized=True,
+                             budget=MigrationBudget(cents_per_cycle=cap))
+    reps = d.run(cycles, months=1.0)
+    for rep in reps:
+        out_of_pocket = rep.spent_cents - rep.prepaid_used_cents
+        assert out_of_pocket + rep.installment_cents <= cap + 1e-9
+    assert any(r.installment_cents > 0 for r in reps)
+    assert any(r.prepaid_used_cents > 0 for r in reps)
+    # oversized moves the plain daemon starves forever land here
+    assert (sum(r.n_selected for r in reps)
+            > sum(r.n_selected for r in plain_reps))
+    # nothing left half-paid once the queue drains
+    assert reps[-1].n_deferred == 0 or reps[-1].installment_cents > 0
+
+
+def test_amortize_oversized_rejected_outside_batch_mode():
+    e = _stream_engine()
+    with pytest.raises(ValueError, match="batch-mode only"):
+        ReoptimizationDaemon(e, amortize_oversized=True)

@@ -580,3 +580,87 @@ def test_streaming_single_provider_flat_table_matches_plain():
         assert a.migration_cents == b.migration_cents
         assert a.penalty_cents == b.penalty_cents
         assert b.egress_cents == 0.0
+
+
+# ------------------------------------------------------------- region egress
+def test_region_egress_intra_provider_cross_region_rates():
+    """Two regions of one provider pay the reduced inter-region rate in
+    both directions; cross-provider lanes still pay full internet egress;
+    same-region moves stay free."""
+    az = azure_table()
+    t = multi_cloud_table([
+        ProviderCostTable("aws", az, egress_out_cents_gb=9.0,
+                          region="us-east-1", region_egress_out_cents_gb=2.0),
+        ProviderCostTable("aws", az, egress_out_cents_gb=9.0,
+                          region="us-west-2", region_egress_out_cents_gb=1.0),
+        ProviderCostTable("gcp", az, egress_out_cents_gb=12.0)])
+    np.testing.assert_array_equal(
+        t.egress_cents_gb,
+        [[0.0, 2.0, 9.0],     # east -> west uses east's region rate
+         [1.0, 0.0, 9.0],     # west -> east uses west's region rate
+         [12.0, 12.0, 0.0]])  # gcp out is full internet egress both ways
+    assert t.provider_regions == ("us-east-1", "us-west-2", None)
+    L = az.num_tiers
+    # tier-level helper: cross-region intra-provider move pays 2.0/GB
+    assert float(move_egress_cents_gb(t, 0, L)) == 2.0
+    assert float(move_egress_cents_gb(t, L, 0)) == 1.0
+    # within one region: free, as before
+    assert float(move_egress_cents_gb(t, 0, L - 1)) == 0.0
+    # region shows up in flattened tier names
+    assert t.names[0].startswith("aws@us-east-1:")
+    assert t.names[2 * L].startswith("gcp:")
+
+
+def test_region_same_region_and_missing_region_stay_zero():
+    az = azure_table()
+    # same provider, same region: duplicate deployment, no egress between
+    t = multi_cloud_table([
+        ProviderCostTable("aws", az, region="eu",
+                          region_egress_out_cents_gb=2.0),
+        ProviderCostTable("aws", az, region="eu",
+                          region_egress_out_cents_gb=2.0)])
+    np.testing.assert_array_equal(t.egress_cents_gb, np.zeros((2, 2)))
+    # same provider, no regions declared: legacy behavior, zero egress
+    t2 = multi_cloud_table([ProviderCostTable("aws", az),
+                            ProviderCostTable("aws", az)])
+    np.testing.assert_array_equal(t2.egress_cents_gb, np.zeros((2, 2)))
+
+
+def test_regionless_tables_bit_identical_to_before():
+    """The region fields default off: a table built without regions is
+    bit-identical to the historic construction, field by field."""
+    t = _alpha_beta(egress_alpha=5.0, egress_beta=7.0)
+    assert t.provider_regions == (None, None)
+    np.testing.assert_array_equal(t.egress_cents_gb,
+                                  [[0.0, 5.0], [7.0, 0.0]])
+    assert t.names[0] == "alpha:hot"
+    # plans on regioned vs plain duplicates of one provider agree when the
+    # region rate is zero (regions only relabel, never re-price)
+    az = azure_table()
+    plain = multi_cloud_table([ProviderCostTable("a", az),
+                               ProviderCostTable("b", az)])
+    regioned = multi_cloud_table([
+        ProviderCostTable("a", az, region="r1"),
+        ProviderCostTable("b", az, region="r2")])
+    np.testing.assert_array_equal(plain.egress_cents_gb,
+                                  regioned.egress_cents_gb)
+    np.testing.assert_array_equal(plain.storage_cents_gb_month,
+                                  regioned.storage_cents_gb_month)
+
+
+def test_region_egress_steers_reoptimize_toward_near_region():
+    """When data must leave a full region, the cheap intra-provider lane
+    beats the expensive cross-provider one in migration accounting."""
+    az = azure_table()
+    t = multi_cloud_table([
+        ProviderCostTable("aws", az, egress_out_cents_gb=9.0,
+                          region="east", region_egress_out_cents_gb=1.0),
+        ProviderCostTable("aws", az, egress_out_cents_gb=9.0,
+                          region="west", region_egress_out_cents_gb=1.0),
+        ProviderCostTable("gcp", az, egress_out_cents_gb=9.0)])
+    L = az.num_tiers
+    src = 0                       # aws@east tier 0
+    to_sibling = float(move_egress_cents_gb(t, src, L))      # aws@west
+    to_rival = float(move_egress_cents_gb(t, src, 2 * L))    # gcp
+    assert to_sibling == 1.0 and to_rival == 9.0
+    assert to_sibling < to_rival

@@ -1,0 +1,138 @@
+"""Async migrator execution plane: overhead, chaos retry amplification.
+
+Three sections:
+
+1. ``migrator/sync/*`` — zero-fault ``AsyncMigrator.execute`` timed against
+   the synchronous ``TieredStore.migrate`` on the same drifted plan. The
+   execution plane is pinned bit-identical to the sync path by the parity
+   tests; the benchmark records what the task queue + checksum verification
+   costs on top (us per move, overhead ratio).
+2. ``migrator/chaos/*`` — the same plan executed through a ``ChaosStore``
+   at increasing transient-fault rates: attempts per move, the retry-cents
+   share of attempted spend, and the committed-move fraction. Backoff
+   sleeps are stubbed out so the numbers isolate the retry machinery.
+3. ``migrator/replan`` — a batch ``ReoptimizationDaemon`` re-planning
+   permanently failed moves across cycles until the fleet converges:
+   cycles to convergence and the failed-cents write-off per cycle.
+
+Set ``BENCH_SMOKE=1`` to shrink to a seconds-long CI smoke run.
+"""
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, row
+from repro.core.costs import azure_table
+from repro.core.daemon import MigrationBudget, ReoptimizationDaemon
+from repro.core.engine import (CompressStage, PartitionedData,
+                               PlacementEngine, ScopeConfig)
+from repro.core.migrator import AsyncMigrator
+from repro.storage.chaos import ChaosStore
+from repro.storage.store import TieredStore
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+N_PARTS = 16 if SMOKE else 96
+CHAOS_P = (0.2,) if SMOKE else (0.05, 0.2, 0.4)
+REPLAN_CYCLES = 4 if SMOKE else 8
+
+_NOSLEEP = lambda s: None  # noqa: E731 — isolate retry cost from backoff
+
+
+def _drifted():
+    rng = np.random.default_rng(11)
+    raws = [bytes([65 + i % 26]) * int(60_000 + 40_000 * rng.random())
+            for i in range(N_PARTS)]
+    cfg = ScopeConfig(tier_whitelist=(0, 1, 2), months=2.0)
+    eng = PlacementEngine(azure_table(), cfg)
+    data = PartitionedData(
+        partitions=[None] * N_PARTS, tables=[None] * N_PARTS,
+        raw_bytes=raws, spans_gb=np.array([len(b) / 1e9 for b in raws]),
+        rho=10.0 ** rng.uniform(-2, 3, N_PARTS))
+    plan = eng.solve(CompressStage(cfg)(data, azure_table()))
+    rho2 = plan.problem.rho * 10.0 ** rng.uniform(-3, 3, N_PARTS)
+    mig = eng.reoptimize(plan, rho2, months_held=2.0)
+    return eng, plan, mig
+
+
+def _fresh(eng, plan):
+    s = TieredStore(eng.table)
+    keys = s.apply_plan(plan)
+    s.advance_months(2.0)
+    return s, keys
+
+
+def _sync_rows(eng, plan, mig):
+    s1, k1 = _fresh(eng, plan)
+    t0 = time.perf_counter()
+    s1.migrate(mig, k1)
+    us_sync = (time.perf_counter() - t0) * 1e6 / max(mig.n_moved, 1)
+    rows = [row("migrator/sync/store.migrate", us_sync, moves=mig.n_moved)]
+    for workers in (1, 4):
+        s2, k2 = _fresh(eng, plan)
+        m = AsyncMigrator(s2, workers=workers, sleep_fn=_NOSLEEP)
+        t0 = time.perf_counter()
+        rep = m.execute(mig, k2)
+        us = (time.perf_counter() - t0) * 1e6 / max(mig.n_moved, 1)
+        rows.append(row(
+            f"migrator/sync/async_w{workers}", us, moves=rep.n_committed,
+            overhead_x=round(us / max(us_sync, 1e-9), 2),
+            bill_drift_cents=round(abs(
+                (s2.meter.read_cents + s2.meter.write_cents)
+                - (s1.meter.read_cents + s1.meter.write_cents)), 9)))
+    return rows
+
+
+def _chaos_rows(eng, plan, mig):
+    rows = []
+    for p in CHAOS_P:
+        s, keys = _fresh(eng, plan)
+        ch = ChaosStore(s, seed=3, p_transient=p, max_faults_per_op=3)
+        m = AsyncMigrator(ch, max_attempts=5, sleep_fn=_NOSLEEP)
+        t0 = time.perf_counter()
+        rep = m.execute(mig, keys)
+        us = (time.perf_counter() - t0) * 1e6 / max(mig.n_moved, 1)
+        att = rep.attempted_cents
+        rows.append(row(
+            f"migrator/chaos/p{p}", us,
+            attempts_per_move=round(rep.n_attempts / max(mig.n_moved, 1), 2),
+            retry_cents_share=round(rep.retry_cents / att if att else 0.0, 4),
+            committed_frac=round(rep.n_committed / max(mig.n_moved, 1), 3),
+            faults=ch.stats.n_faults))
+    return rows
+
+
+def _replan_rows(eng, plan, mig):
+    s, keys = _fresh(eng, plan)
+    ch = ChaosStore(s, seed=5, p_permanent=1.0, max_faults_per_op=1)
+    m = AsyncMigrator(ch, sleep_fn=_NOSLEEP)
+    d = ReoptimizationDaemon(eng, plan=plan, migrator=m, store_keys=keys,
+                             budget=MigrationBudget(cents_per_cycle=np.inf))
+    rho2 = mig.plan.problem.rho
+    t0 = time.perf_counter()
+    cycles = 0
+    for _ in range(REPLAN_CYCLES):
+        rep = d.step(rho2, months=1.0)
+        cycles += 1
+        if rep.n_failed == 0 and rep.n_selected == 0:
+            break
+    us = (time.perf_counter() - t0) * 1e6 / max(cycles, 1)
+    # micro-cents: the bench payloads are ~100 KB, so per-move charges sit
+    # far below one cent
+    return [row(
+        "migrator/replan", us, cycles_to_converge=cycles,
+        failed_moves=sum(r.n_failed for r in d.history),
+        attempted_ucents=round(
+            1e6 * sum(r.attempted_cents for r in d.history), 2))]
+
+
+def run():
+    eng, plan, mig = _drifted()
+    return emit(_sync_rows(eng, plan, mig) + _chaos_rows(eng, plan, mig)
+                + _replan_rows(eng, plan, mig), "migrator")
+
+
+if __name__ == "__main__":
+    run()

@@ -21,6 +21,7 @@ MODULES = [
     ("daemon", "benchmarks.bench_daemon"),
     ("multicloud", "benchmarks.bench_multicloud"),
     ("fleet", "benchmarks.bench_fleet"),
+    ("migrator", "benchmarks.bench_migrator"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

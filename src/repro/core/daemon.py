@@ -93,6 +93,17 @@ class DaemonCycleReport:
     n_tenants: int = 1                # > 1 only in fleet mode
     installment_cents: float = 0.0    # banked toward oversized moves this cycle
     prepaid_used_cents: float = 0.0   # prior installments consumed by landings
+    # execution-plane outcome (populated when a migrator is attached):
+    # moves that failed terminally this cycle are *reverted* in the plan
+    # (MigrationPlan.land) and re-enter the candidate set next cycle —
+    # spent_cents covers landed moves only, the failure cost is metered
+    # separately so no move is ever double-billed
+    n_failed: int = 0                 # selected moves that failed to land
+    retry_cents: float = 0.0          # wasted attempts of landed moves
+    failed_cents: float = 0.0         # cents burned by failed moves
+    attempted_cents: float = 0.0      # spent + retry + failed — what the
+    # per-cycle budget cap is enforced against (== spent_cents without a
+    # migrator: the synchronous path lands everything it bills)
 
 
 def linear_trend_forecast(history: Sequence, horizon: float = 1.0,
@@ -152,6 +163,21 @@ class ReoptimizationDaemon:
     ``store.migrate`` (the store must already hold the initial plan via
     ``apply_plan``; pass ``store_keys`` if you used custom keys), streaming
     mode calls ``store.sync_plan`` with payloads from ``payload_fn``.
+
+    ``migrator=`` (batch/streaming; mutually exclusive with ``store=``)
+    routes execution through an :class:`~repro.core.migrator.AsyncMigrator`
+    instead of the synchronous store calls: moves that fail terminally in a
+    cycle are folded back via :meth:`MigrationPlan.land` — reverted in the
+    daemon's state, re-planned next cycle as still-candidates — with their
+    burned cents metered on the report (``retry_cents`` / ``failed_cents``
+    / ``n_failed``), and the per-cycle cents cap is enforced by the
+    migrator over *attempted* spend, so retries cannot blow the budget.
+    Fleet mode takes ``migrators=`` (one per tenant, wrapping each
+    tenant's own store); the shared budget decrements tenant-by-tenant by
+    attempted cents. With zero faults the migrator path is bit-identical
+    to ``store=``. ``amortize_oversized`` is incompatible with a migrator:
+    its budget ledger reasons over residual charges, the execution plane
+    over full per-move charges.
     """
 
     def __init__(self, engine: "PlacementEngine | StreamingEngine | FleetEngine",
@@ -168,7 +194,8 @@ class ReoptimizationDaemon:
                  forecast_fn: Optional[Callable] = None,
                  forecast_window: int = 6,
                  store=None, store_keys: Optional[list] = None,
-                 payload_fn: Optional[Callable] = None):
+                 payload_fn: Optional[Callable] = None,
+                 migrator=None, migrators: Optional[Sequence] = None):
         self.streaming = isinstance(engine, StreamingEngine)
         self.fleet = isinstance(engine, FleetEngine)
         self.engine = engine
@@ -183,12 +210,26 @@ class ReoptimizationDaemon:
         self.store = store
         self.store_keys = store_keys
         self.payload_fn = payload_fn
+        self.migrator = migrator
+        self.migrators = list(migrators) if migrators is not None else None
         self.history: List[DaemonCycleReport] = []
         if plans is not None and not self.fleet:
             raise ValueError("plans= is fleet mode — hand the daemon a "
                              "FleetEngine (single-tenant modes take plan=)")
         if amortize_oversized and (self.streaming or self.fleet):
             raise ValueError("amortize_oversized is batch-mode only")
+        if amortize_oversized and migrator is not None:
+            raise ValueError("amortize_oversized is incompatible with a "
+                             "migrator: the installment ledger budgets "
+                             "residual charges, the execution plane full "
+                             "per-move charges")
+        if store is not None and migrator is not None:
+            raise ValueError("pass either store= (synchronous mirroring) or "
+                             "migrator= (resilient execution), not both — "
+                             "the migrator wraps its own store")
+        if migrators is not None and not self.fleet:
+            raise ValueError("migrators= is fleet mode (one per tenant); "
+                             "single-tenant modes take migrator=")
         if self.fleet:
             if plan is not None:
                 raise ValueError("fleet mode takes plans= (one per tenant), "
@@ -199,6 +240,16 @@ class ReoptimizationDaemon:
             if store is not None:
                 raise ValueError("store mirroring is single-tenant; attach "
                                  "stores outside the fleet daemon")
+            if migrator is not None:
+                raise ValueError("fleet mode takes migrators= (one per "
+                                 "tenant), not migrator=")
+            if migrators is not None and len(migrators) != len(plans):
+                raise ValueError(f"migrators= needs one migrator per tenant "
+                                 f"({len(plans)}), got {len(migrators)}")
+            if migrators is not None and store_keys is not None \
+                    and len(store_keys) != len(plans):
+                raise ValueError("fleet store_keys= must be a per-tenant "
+                                 "list of key lists")
             self.plans: List[PlacementPlan] = list(plans)
             self.rho_rel_tol = 0.25 if rho_rel_tol is None else rho_rel_tol
             self.rho_abs_tol = 0.0 if rho_abs_tol is None else rho_abs_tol
@@ -218,6 +269,11 @@ class ReoptimizationDaemon:
                                  "rho_abs_tol to its constructor instead")
             self._ages: Dict[Tuple, int] = {}
             self._rho_hist: Dict[Tuple, collections.deque] = {}
+            # consecutive batches each tracked partition has been absent —
+            # history is retired only after forecast_window misses, so
+            # rolling-window churn doesn't reset calibration for
+            # partitions that reappear a batch later
+            self._rho_miss: Dict[Tuple, int] = {}
         else:
             if plan is None:
                 raise ValueError("batch mode needs the initial "
@@ -339,6 +395,16 @@ class ReoptimizationDaemon:
         keep = self._choose(full, self._age_arr, paid=paid)
         mig = full.select(keep)
 
+        exec_rep = None
+        if self.migrator is not None:
+            # execute BEFORE the state updates: moves that fail to land
+            # must revert (deferred-candidate status) so every clock, age
+            # and lock base below sees the state actually reached
+            self.migrator.store.advance_months(months)
+            exec_rep = self.migrator.execute(
+                mig, self.store_keys, budget_cents=self._cycle_cap())
+            mig = mig.land(exec_rep.unapplied_mask())
+
         installment = prepaid_used = 0.0
         if self.amortize_oversized and self.budget.finite \
                 and np.isfinite(self.budget.cents_per_cycle):
@@ -384,7 +450,13 @@ class ReoptimizationDaemon:
         return self._report(mig, deferred,
                             int(self._age_arr.max()) if deferred.any()
                             else 0, installment_cents=installment,
-                            prepaid_used_cents=prepaid_used)
+                            prepaid_used_cents=prepaid_used,
+                            exec_rep=exec_rep)
+
+    def _cycle_cap(self) -> Optional[float]:
+        """The cents cap handed to the execution plane (None = uncapped)."""
+        cap = self.budget.cents_per_cycle
+        return float(cap) if np.isfinite(cap) else None
 
     # ------------------------------------------------------------ fleet mode
     def _step_fleet(self, rho_obs: List[np.ndarray], months: float,
@@ -413,6 +485,22 @@ class ReoptimizationDaemon:
         keeps = self._choose_fleet(migs)
         migs = [m.select(k) for m, k in zip(migs, keeps)]
 
+        exec_reps = []
+        if self.migrators is not None:
+            # sequential per-tenant execution against a SHARED attempted-
+            # spend ledger: each tenant's cap is what the fleet has left
+            remaining = self._cycle_cap()
+            for t, mig in enumerate(migs):
+                self.migrators[t].store.advance_months(months)
+                keys_t = (self.store_keys[t]
+                          if self.store_keys is not None else None)
+                rep_t = self.migrators[t].execute(
+                    mig, keys_t, budget_cents=remaining)
+                exec_reps.append(rep_t)
+                if remaining is not None:
+                    remaining = max(0.0, remaining - rep_t.attempted_cents)
+                migs[t] = mig.land(rep_t.unapplied_mask())
+
         max_age = 0
         for t, mig in enumerate(migs):
             self._months_held_f[t] = np.where(mig.moved, 0.0, held[t])
@@ -433,6 +521,7 @@ class ReoptimizationDaemon:
         penalty = sum(s[2] for s in spent)
         gb = sum(s[3] for s in spent)
         deferreds = [m.deferred for m in migs]
+        spent_cents = transfer + egress + penalty
         rep = DaemonCycleReport(
             cycle=len(self.history),
             n_partitions=sum(m.plan.problem.n for m in migs),
@@ -441,10 +530,16 @@ class ReoptimizationDaemon:
             n_deferred=int(sum(d.sum() for d in deferreds)),
             migration_cents=transfer, egress_cents=egress,
             penalty_cents=penalty,
-            spent_cents=transfer + egress + penalty, moved_gb=gb,
+            spent_cents=spent_cents, moved_gb=gb,
             steady_cents=float(sum(m.plan.report.total_cents
                                    for m in migs)),
-            max_deferral_age=max_age, n_tenants=T)
+            max_deferral_age=max_age, n_tenants=T,
+            n_failed=sum(r.n_failed for r in exec_reps),
+            retry_cents=float(sum(r.retry_cents for r in exec_reps)),
+            failed_cents=float(sum(r.failed_cents for r in exec_reps)),
+            attempted_cents=(float(sum(r.attempted_cents
+                                       for r in exec_reps))
+                             if exec_reps else spent_cents))
         self.history.append(rep)
         return rep
 
@@ -456,13 +551,22 @@ class ReoptimizationDaemon:
             h = self._rho_hist.setdefault(
                 k, collections.deque(maxlen=self.forecast_window))
             h.append(float(rho_obs[i]))
+            self._rho_miss.pop(k, None)
             out[i] = float(self.forecast_fn(list(h)))
-        for stale in set(self._rho_hist) - set(keys):
-            del self._rho_hist[stale]
+        # retire history only after forecast_window CONSECUTIVE absences:
+        # a partition that drops out of one batch and reappears in the
+        # next (rolling-window churn) keeps its calibration
+        for absent in set(self._rho_hist) - set(keys):
+            misses = self._rho_miss.get(absent, 0) + 1
+            if misses >= self.forecast_window:
+                del self._rho_hist[absent]
+                self._rho_miss.pop(absent, None)
+            else:
+                self._rho_miss[absent] = misses
         return out
 
     def _step_stream(self, batch, months: float) -> DaemonCycleReport:
-        captured: Dict[str, list] = {}
+        captured: Dict[str, object] = {}
 
         def select(mig: MigrationPlan) -> np.ndarray:
             keys = occurrence_keys(mig.plan.problem.partitions)
@@ -470,11 +574,28 @@ class ReoptimizationDaemon:
             captured["keys"] = keys
             return self._choose(mig, ages)
 
+        def execute(mig: MigrationPlan) -> np.ndarray:
+            # same store-op order as the synchronous path below:
+            # advance the billing clock, then reconcile the plan
+            self.migrator.store.advance_months(months)
+            parts = mig.plan.problem.partitions or []
+            payloads = ([self.payload_fn(p) for p in parts]
+                        if self.payload_fn is not None else None)
+            rep = self.migrator.execute_sync(
+                mig, payloads, budget_cents=self._cycle_cap())
+            captured["exec"] = rep
+            return rep.unapplied_mask()
+
         mig = self.engine.ingest_and_reoptimize(
             batch, months=months,
             select_moves=select if self.budget.finite else None,
             project_rho=(self._project_stream
-                         if self.forecast_fn is not None else None))
+                         if self.forecast_fn is not None else None),
+            execute_moves=execute if self.migrator is not None else None)
+        if self.migrator is not None and "exec" not in captured:
+            # empty step (N == 0): the hook never ran, but the billing
+            # clock still advances — identical to the synchronous path
+            self.migrator.store.advance_months(months)
         keys = captured.get(
             "keys", occurrence_keys(mig.plan.problem.partitions or []))
         deferred = mig.deferred
@@ -488,13 +609,16 @@ class ReoptimizationDaemon:
             if parts:
                 self.store.sync_plan(mig.plan, payloads=payloads)
         return self._report(mig, deferred,
-                            max(self._ages.values(), default=0))
+                            max(self._ages.values(), default=0),
+                            exec_rep=captured.get("exec"))
 
     # ------------------------------------------------------------- report
     def _report(self, mig: MigrationPlan, deferred: np.ndarray,
                 max_age: int, installment_cents: float = 0.0,
-                prepaid_used_cents: float = 0.0) -> DaemonCycleReport:
+                prepaid_used_cents: float = 0.0,
+                exec_rep=None) -> DaemonCycleReport:
         transfer, egress, penalty, gb = self._spent(mig)
+        spent = transfer + egress + penalty
         rep = DaemonCycleReport(
             cycle=len(self.history),
             n_partitions=mig.plan.problem.n,
@@ -502,10 +626,17 @@ class ReoptimizationDaemon:
             n_deferred=int(deferred.sum()),
             migration_cents=transfer, egress_cents=egress,
             penalty_cents=penalty,
-            spent_cents=transfer + egress + penalty,
+            spent_cents=spent,
             moved_gb=gb, steady_cents=mig.plan.report.total_cents,
             max_deferral_age=max_age,
             installment_cents=installment_cents,
-            prepaid_used_cents=prepaid_used_cents)
+            prepaid_used_cents=prepaid_used_cents,
+            n_failed=exec_rep.n_failed if exec_rep is not None else 0,
+            retry_cents=(exec_rep.retry_cents
+                         if exec_rep is not None else 0.0),
+            failed_cents=(exec_rep.failed_cents
+                          if exec_rep is not None else 0.0),
+            attempted_cents=(exec_rep.attempted_cents
+                             if exec_rep is not None else spent))
         self.history.append(rep)
         return rep

@@ -261,6 +261,21 @@ class MigrationPlan:
             move_penalty_cents=self.move_penalty_cents,
             old_stored_gb=self.old_stored_gb)
 
+    def land(self, unapplied: np.ndarray) -> "MigrationPlan":
+        """Fold execution outcomes back into the plan.
+
+        ``unapplied`` marks selected moves that did **not** land (the
+        executor's failed/budget-skipped rows). Those moves revert to
+        deferred-candidate status — old tier/scheme in the assignment, so
+        the steady-state report prices the state actually reached and the
+        next cycle re-plans them. When every selected move landed, returns
+        ``self`` unchanged (the zero-fault parity pin).
+        """
+        unapplied = np.asarray(unapplied, bool)
+        if not bool((unapplied & self.moved).any()):
+            return self
+        return self.select(self.moved & ~unapplied)
+
 
 # ------------------------------------------------------------------ stages
 class PartitionStage:
@@ -721,6 +736,8 @@ class StreamStepReport:
     steady_cents: float               # steady-state bill of the new plan
     egress_cents: float = 0.0         # cross-provider egress paid this step
     n_deferred: int = 0               # candidate moves a budget postponed
+    n_failed: int = 0                 # selected moves whose execution did
+    # not land (reverted; re-enter the candidate set next batch)
 
 
 @dataclasses.dataclass
@@ -848,6 +865,9 @@ class StreamingEngine:
                               project_rho: Optional[
                                   Callable[[List[datapart.Partition],
                                             np.ndarray], np.ndarray]]
+                              = None,
+                              execute_moves: Optional[
+                                  Callable[[MigrationPlan], np.ndarray]]
                               = None) -> MigrationPlan:
         """Fold one access-log batch in, compact if drifted, re-optimize.
 
@@ -866,6 +886,16 @@ class StreamingEngine:
         deferred candidates stay at their old tier/scheme, keep their
         lock base (so they re-surface as drifted next batch) and their
         minimum-stay clock keeps running.
+
+        ``execute_moves(mig) -> unapplied_mask`` hands the selected plan
+        to an execution plane (e.g. ``AsyncMigrator.execute_sync``) and
+        returns an (N,) bool mask of rows that did **not** land (failed or
+        budget-stopped). Those rows are folded back via
+        :meth:`MigrationPlan.land` — reverted to deferred-candidate status
+        with their lock base kept, so they re-enter the candidate set next
+        batch; a new partition whose ingestion put failed re-enters as new
+        data (no held state). With the hook absent or an all-False mask
+        the step is bit-identical to the synchronous path.
         """
         sp = self._ensure_partitioner(query_files)
         compacted = False
@@ -883,7 +913,8 @@ class StreamingEngine:
             self.history.append(StreamStepReport(
                 batch=len(self.history), n_partitions=0, n_new=0, n_moved=0,
                 compacted=compacted, migration_cents=0.0, penalty_cents=0.0,
-                steady_cents=0.0, egress_cents=0.0, n_deferred=0))
+                steady_cents=0.0, egress_cents=0.0, n_deferred=0,
+                n_failed=0))
             return mig
         cur_l = np.full(N, -1, int)
         cur_k = np.full(N, -1, int)
@@ -912,6 +943,15 @@ class StreamingEngine:
             rho_ref=rho_ref, rho_abs_tol=self.rho_abs_tol)
         if select_moves is not None:
             mig = mig.select(np.asarray(select_moves(mig), bool))
+        exec_failed = np.zeros(N, bool)
+        n_failed = 0
+        if execute_moves is not None:
+            exec_failed = np.asarray(execute_moves(mig), bool)
+            if exec_failed.shape != (N,):
+                raise ValueError(f"execute_moves must return shape "
+                                 f"({N},), got {exec_failed.shape}")
+            n_failed = int((exec_failed & mig.moved).sum())
+            mig = mig.land(exec_failed)
 
         drifted = drift_gate(problem.rho, rho_ref, self.rho_rel_tol,
                              self.rho_abs_tol)
@@ -919,6 +959,10 @@ class StreamingEngine:
         new_stored = mig.plan.stored_gb
         self._held = {}
         for i, p in enumerate(parts):
+            if exec_failed[i] and cur_l[i] < 0:
+                # ingestion put failed: the object does not exist, so the
+                # partition must re-enter as new data next batch
+                continue
             surviving = cur_l[i] >= 0 and not mig.moved[i]
             self._held.setdefault(p.files, []).append(_HeldState(
                 tier=int(mig.new_tier[i]), scheme=int(mig.new_scheme[i]),
@@ -939,5 +983,5 @@ class StreamingEngine:
             penalty_cents=mig.penalty_cents,
             steady_cents=mig.plan.report.total_cents,
             egress_cents=mig.egress_cents,
-            n_deferred=int(deferred.sum())))
+            n_deferred=int(deferred.sum()), n_failed=n_failed))
         return mig

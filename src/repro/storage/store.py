@@ -22,6 +22,15 @@ from repro.core.costs import CostTable, azure_table, move_egress_cents_gb
 from repro.storage.codecs import Codec, codec_by_name
 
 
+class StoreError(Exception):
+    """Base class for store-level failures the execution plane can handle."""
+
+
+class ChecksumError(StoreError):
+    """A payload's hash did not match its expected checksum — the bytes
+    were corrupted in flight. Retryable: nothing was billed or mutated."""
+
+
 @dataclasses.dataclass
 class BillingMeter:
     """Accrues cents, mirrors the paper's cost break-up columns."""
@@ -55,6 +64,7 @@ class _Obj:
     codec: str
     created_month: float
     moved_month: float
+    checksum: str = ""                # lazy sha256 of the DECODED payload
 
 
 class TieredStore:
@@ -88,8 +98,22 @@ class TieredStore:
             self._month += months
 
     # ------------------------------------------------------------------- ops
-    def put(self, key: str, raw: bytes, tier: int, codec: str = "none") -> int:
+    def put(self, key: str, raw: bytes, tier: int, codec: str = "none",
+            expect_checksum: Optional[str] = None) -> int:
+        """Store ``raw`` at ``tier`` under ``codec``, metering the write.
+
+        ``expect_checksum`` (a sha256 hexdigest of ``raw``) lets a caller
+        verify the bytes arrived intact: on mismatch a :class:`ChecksumError`
+        is raised *before* anything is billed or mutated — the retry path
+        of the async migrator.
+        """
         c = codec_by_name(codec)
+        if expect_checksum is not None:
+            got = hashlib.sha256(raw).hexdigest()
+            if got != expect_checksum:
+                raise ChecksumError(
+                    f"put {key!r}: payload checksum {got[:12]} != expected "
+                    f"{expect_checksum[:12]} (corrupted in flight)")
         payload = c.compress(raw)
         raw_gb = len(raw) / 1e9
         stored_gb = len(payload) / 1e9
@@ -116,9 +140,37 @@ class TieredStore:
             self.meter.compute_cents += dt * self.table.compute_cents_sec
         return raw
 
+    def checksum(self, key: str) -> str:
+        """sha256 hexdigest of the object's DECODED payload (what :meth:`get`
+        returns when nothing corrupts it). Computed lazily from the stored
+        payload and cached; a metadata operation — nothing is billed. The
+        async migrator compares this against the hash of a fetched payload
+        to detect in-flight read corruption before committing a move."""
+        o = self._objs[key]
+        if not o.checksum:
+            dec = codec_by_name(o.codec).decompress(o.payload)
+            o.checksum = hashlib.sha256(dec).hexdigest()
+        return o.checksum
+
+    def has(self, key: str) -> bool:
+        return key in self._objs
+
+    def codec_of(self, key: str) -> str:
+        return self._objs[key].codec
+
     def _egress_cents_gb(self, old_tier: int, new_tier: int) -> float:
         """Per-GB cross-provider egress for a move; 0 on single-cloud tables."""
         return float(move_egress_cents_gb(self.table, old_tier, new_tier))
+
+    def _early_delete_cents(self, o: _Obj) -> float:
+        """Prorated remainder of the minimum-stay storage charge (0 once the
+        stay elapsed). Call with the lock held."""
+        held = self._month - o.moved_month
+        min_stay = float(self.table.early_delete_months[o.tier])
+        if held < min_stay:
+            return (o.stored_gb * self.table.storage_cents_gb_month[o.tier]
+                    * (min_stay - held))
+        return 0.0
 
     def change_tier(self, key: str, new_tier: int) -> None:
         """Tier change = read from old + write to new (+ early-delete penalty;
@@ -128,13 +180,7 @@ class TieredStore:
         if new_tier == o.tier:
             return
         with self._lock:
-            held = self._month - o.moved_month
-            min_stay = float(self.table.early_delete_months[o.tier])
-            if held < min_stay:
-                # prorated remainder of the minimum-stay storage charge
-                self.meter.penalty_cents += (
-                    o.stored_gb * self.table.storage_cents_gb_month[o.tier]
-                    * (min_stay - held))
+            self.meter.penalty_cents += self._early_delete_cents(o)
             self.meter.read_cents += o.stored_gb * self.table.read_cents_gb[o.tier]
             self.meter.write_cents += o.stored_gb * self.table.write_cents_gb[new_tier]
             self.meter.egress_cents += (
@@ -142,15 +188,49 @@ class TieredStore:
             o.tier = new_tier
             o.moved_month = self._month
 
+    def replace(self, key: str, raw: bytes, new_tier: int,
+                codec: str = "none",
+                expect_checksum: Optional[str] = None) -> int:
+        """Atomic delete + put: re-encode/re-tier an existing object in ONE
+        commit under the lock.
+
+        The delete-side early-deletion penalty, the write-in of the new
+        payload, and the source provider's egress (old stored bytes crossing
+        the provider boundary exactly once) are billed together with the
+        object swap — or, when compression or checksum validation fails, not
+        at all. A failed or interrupted re-encode therefore never leaves the
+        source deleted with its penalty charged and nothing re-put: the
+        store-side half of the async migrator's rollback contract.
+
+        ``expect_checksum`` (sha256 of ``raw``) is verified before any
+        billing, mirroring :meth:`put`.
+        """
+        c = codec_by_name(codec)
+        if expect_checksum is not None:
+            got = hashlib.sha256(raw).hexdigest()
+            if got != expect_checksum:
+                raise ChecksumError(
+                    f"replace {key!r}: payload checksum {got[:12]} != "
+                    f"expected {expect_checksum[:12]} (corrupted in flight)")
+        payload = c.compress(raw)      # may raise -> nothing billed/mutated
+        raw_gb = len(raw) / 1e9
+        stored_gb = len(payload) / 1e9
+        with self._lock:
+            o = self._objs[key]
+            self.meter.penalty_cents += self._early_delete_cents(o)
+            self.meter.write_cents += (
+                stored_gb * self.table.write_cents_gb[new_tier])
+            self.meter.n_writes += 1
+            self.meter.egress_cents += (
+                o.stored_gb * self._egress_cents_gb(o.tier, new_tier))
+            self._objs[key] = _Obj(payload, raw_gb, stored_gb, new_tier,
+                                   codec, self._month, self._month)
+        return len(payload)
+
     def delete(self, key: str) -> None:
         with self._lock:
             o = self._objs.pop(key)
-            held = self._month - o.moved_month
-            min_stay = float(self.table.early_delete_months[o.tier])
-            if held < min_stay:
-                self.meter.penalty_cents += (
-                    o.stored_gb * self.table.storage_cents_gb_month[o.tier]
-                    * (min_stay - held))
+            self.meter.penalty_cents += self._early_delete_cents(o)
 
     # ------------------------------------------------------------ plan wiring
     @staticmethod
@@ -168,6 +248,11 @@ class TieredStore:
         if raws is None:
             raise ValueError("plan has no raw_bytes; build it with a "
                              "PartitionStage-backed problem")
+        if keys is not None and len(keys) != len(raws):
+            # validate BEFORE the loop: a short keys list would raise an
+            # IndexError mid-way with some puts already billed
+            raise ValueError(f"keys has {len(keys)} entries for "
+                             f"{len(raws)} partitions; nothing applied")
         schemes = plan.problem.schemes
         out = []
         for n, raw in enumerate(raws):
@@ -189,24 +274,35 @@ class TieredStore:
         *selected* moves appear in ``migration.moved``, so deferred
         candidates are left untouched and the metered cents equal the
         partial plan's ``migration_cents + penalty_cents`` exactly.
+
+        Shapes and key existence are validated up front — a ``keys`` list
+        shorter than ``migration.moved`` (or pointing at absent objects)
+        raises :class:`ValueError` *before* any move is billed, so a bad
+        call can never leave the meter half-charged.
         """
+        n_total = len(migration.moved)
+        if keys is not None and len(keys) != n_total:
+            raise ValueError(f"keys has {len(keys)} entries for a "
+                             f"{n_total}-partition migration; "
+                             f"nothing migrated")
         schemes = migration.plan.problem.schemes
-        moved_idx = [int(n) for n in range(len(migration.moved))
-                     if migration.moved[n]]
-        for n in moved_idx:
-            key = keys[n] if keys is not None else self._plan_key(n)
+        moved_idx = [int(n) for n in range(n_total) if migration.moved[n]]
+        moved_keys = [keys[n] if keys is not None else self._plan_key(n)
+                      for n in moved_idx]
+        missing = [k for k in moved_keys if k not in self._objs]
+        if missing:
+            raise ValueError(f"unknown object keys {missing[:4]} "
+                             f"({len(missing)} of {len(moved_keys)} moves); "
+                             f"nothing migrated")
+        for n, key in zip(moved_idx, moved_keys):
             if migration.new_scheme[n] != migration.old_scheme[n]:
-                old = self._objs[key]
-                old_tier, old_stored = old.tier, old.stored_gb
+                # read + atomic delete/put/egress commit (see replace):
+                # the source can never end up deleted without a committed
+                # destination, and egress is charged exactly once on the
+                # old payload crossing the provider boundary
                 raw = self.get(key)
-                self.delete(key)
-                self.put(key, raw, int(migration.new_tier[n]),
-                         schemes[int(migration.new_scheme[n])])
-                # the old payload crossed the provider boundary exactly once
-                with self._lock:
-                    self.meter.egress_cents += old_stored * \
-                        self._egress_cents_gb(old_tier,
-                                              int(migration.new_tier[n]))
+                self.replace(key, raw, int(migration.new_tier[n]),
+                             schemes[int(migration.new_scheme[n])])
             else:
                 self.change_tier(key, int(migration.new_tier[n]))
         return len(moved_idx)
@@ -247,6 +343,11 @@ class TieredStore:
                              "partition file sets to key objects")
         if payloads is None:
             payloads = plan.problem.raw_bytes
+        if payloads is not None and len(payloads) != len(parts):
+            # validate BEFORE the loop: a misaligned payloads list would
+            # raise an IndexError with earlier ops already billed
+            raise ValueError(f"payloads has {len(payloads)} entries for "
+                             f"{len(parts)} partitions; nothing synced")
         schemes = plan.problem.schemes
         stats = {"put": 0, "moved": 0, "reencoded": 0, "deleted": 0}
         keys = self.plan_keys(plan)
@@ -262,13 +363,8 @@ class TieredStore:
                 self.put(key, payloads[n], tier, codec)
                 stats["put"] += 1
             elif o.codec != codec:
-                old_tier, old_stored = o.tier, o.stored_gb
                 raw = self.get(key)
-                self.delete(key)
-                self.put(key, raw, tier, codec)
-                with self._lock:
-                    self.meter.egress_cents += old_stored * \
-                        self._egress_cents_gb(old_tier, tier)
+                self.replace(key, raw, tier, codec)
                 stats["reencoded"] += 1
             elif o.tier != tier:
                 self.change_tier(key, tier)

@@ -1,0 +1,151 @@
+"""Property-style billing parity: for EVERY selected subset of candidate
+moves, the cents a ``TieredStore`` meters while executing the partial plan
+equal the ``MigrationPlan``'s own per-move cents arrays — across re-encode,
+cross-provider egress, and early-delete composition, batch and streaming.
+
+This is the contract the daemon's budget accounting (and the async
+migrator's attempted-spend ledger) stands on: ``select(keep)`` must revert
+deferred moves *exactly*, never just approximately.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.costs import (CostTable, ProviderCostTable, azure_table,
+                              multi_cloud_table)
+from repro.core.engine import (CompressStage, PartitionedData,
+                               PlacementEngine, ScopeConfig, StreamingEngine)
+from repro.storage.store import TieredStore
+
+_DET = ("read_cents", "write_cents", "penalty_cents", "egress_cents")
+
+
+def _alpha_beta():
+    """Two providers with opposite storage/read trade-offs (mirrors the
+    multicloud test fixture): drift forces provider moves that pay egress;
+    beta:cold carries a 1-month minimum stay for early-delete coverage."""
+    alpha = CostTable(
+        storage_cents_gb_month=np.array([10.0, 8.0]),
+        read_cents_gb=np.array([0.1, 0.5]),
+        write_cents_gb=np.array([0.05, 0.05]),
+        ttfb_seconds=np.array([0.01, 0.05]),
+        capacity_gb=np.array([np.inf, np.inf]),
+        early_delete_months=np.array([0.0, 0.0]),
+        names=("hot", "warm"))
+    beta = CostTable(
+        storage_cents_gb_month=np.array([2.0, 0.2]),
+        read_cents_gb=np.array([1.0, 4.0]),
+        write_cents_gb=np.array([0.05, 0.05]),
+        ttfb_seconds=np.array([0.05, 0.2]),
+        capacity_gb=np.array([np.inf, np.inf]),
+        early_delete_months=np.array([0.0, 1.0]),
+        names=("std", "cold"))
+    return multi_cloud_table([ProviderCostTable("alpha", alpha, 5.0, np.inf),
+                              ProviderCostTable("beta", beta, 7.0, np.inf)])
+
+
+def _payload_plan(table, tier_whitelist):
+    raws = [(bytes([65 + i % 8]) * (150_000 + 40_000 * i)) for i in range(8)]
+    cfg = ScopeConfig(tier_whitelist=tier_whitelist, months=2.0)
+    eng = PlacementEngine(table, cfg)
+    data = PartitionedData(
+        partitions=[None] * len(raws), tables=[None] * len(raws),
+        raw_bytes=raws, spans_gb=np.array([len(b) / 1e9 for b in raws]),
+        rho=np.array([0.05, 0.1, 40.0, 0.02, 800.0, 5.0, 0.5, 120.0]))
+    return eng, eng.solve(CompressStage(cfg)(data, table))
+
+
+def _assert_store_meters_exactly(table, tier_whitelist, months_held,
+                                 seed, n_masks=8):
+    eng, plan = _payload_plan(table, tier_whitelist)
+    rng = np.random.default_rng(seed)
+    rho2 = plan.problem.rho * rng.uniform(1e-4, 1e4, plan.problem.n)
+    full = eng.reoptimize(plan, rho2, months_held=months_held)
+    assert full.n_candidates >= 2
+    masks = [np.zeros(plan.problem.n, bool), np.ones(plan.problem.n, bool)]
+    masks += [rng.random(plan.problem.n) < 0.5 for _ in range(n_masks)]
+    for keep in masks:
+        sub = full.select(keep)
+        store = TieredStore(table)
+        keys = store.apply_plan(plan)
+        store.advance_months(months_held)
+        before = {f: getattr(store.meter, f) for f in _DET}
+        store.migrate(sub, keys)
+        d = {f: getattr(store.meter, f) - before[f] for f in _DET}
+        transfer = float(np.where(sub.moved, sub.move_transfer_cents,
+                                  0.0).sum())
+        assert d["read_cents"] + d["write_cents"] == \
+            pytest.approx(transfer, rel=1e-9, abs=1e-15)
+        assert d["egress_cents"] == pytest.approx(
+            sub.egress_cents, rel=1e-9, abs=1e-15)
+        assert d["penalty_cents"] == pytest.approx(
+            sub.penalty_cents, rel=1e-9, abs=1e-15)
+        assert sum(d.values()) == pytest.approx(
+            sub.total_move_cents, rel=1e-9, abs=1e-15)
+
+
+def test_batch_subsets_meter_exactly_with_reencode_and_early_delete():
+    # azure archive tier: 6-month min stay, so months_held=2 composes
+    # early-delete penalties with lz4/zlib re-encodes
+    _assert_store_meters_exactly(azure_table(), (0, 1, 2, 3),
+                                 months_held=2.0, seed=0)
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_batch_subsets_meter_exactly_cross_provider(seed):
+    # alpha<->beta moves pay the source provider's egress exactly once;
+    # months_held=0.5 keeps beta:cold inside its 1-month minimum stay
+    _assert_store_meters_exactly(_alpha_beta(), (0, 1, 2, 3),
+                                 months_held=0.5, seed=seed)
+
+
+def test_stream_subsets_meter_exactly():
+    """Random keep masks through the streaming select hook: each step the
+    store-metered move cents equal the selected plan's cents exactly
+    (fixed partition set — infinite window, no compaction — so sync_plan
+    performs moves only after the first batch)."""
+    table = _alpha_beta()
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    # file sizes (GB) must equal the actual payload bytes the store bills,
+    # or plan cents and meter cents diverge by construction
+    fbytes = {f"d{i}/{j}": 200_000 + 60_000 * j
+              for i in range(3) for j in range(3)}
+    sizes = {f: b / 1e9 for f, b in fbytes.items()}
+    eng = StreamingEngine(table, cfg, sizes, s_thresh=5.0, window=1,
+                          drift_threshold=np.inf)
+    store = TieredStore(table)
+    rng = np.random.default_rng(7)
+    fams = [("d0/0", "d0/1"), ("d1/0", "d1/1"), ("d2/0", "d2/1")]
+    payload = {f: b"s" * sum(fbytes[x] for x in f) for f in fams}
+    for step in range(6):
+        # every family flips hot<->cold each batch: candidates every step
+        rates = [500.0 if (step + i) % 2 == 0 else 0.01
+                 for i in range(len(fams))]
+        batch = [(f, float(r)) for f, r in zip(fams, rates)]
+        mask = rng.random(len(fams)) < 0.5
+
+        def select(mig):
+            return mask[:mig.moved.shape[0]]
+
+        mig = eng.ingest_and_reoptimize(batch, months=1.0,
+                                        select_moves=select)
+        store.advance_months(1.0)
+        before = {f: getattr(store.meter, f) for f in _DET}
+        parts = mig.plan.problem.partitions
+        stats = store.sync_plan(
+            mig.plan, payloads=[payload[tuple(sorted(p.files))]
+                                for p in parts])
+        d = {f: getattr(store.meter, f) - before[f] for f in _DET}
+        if step == 0:
+            assert stats["put"] == len(fams)
+            continue
+        assert stats["put"] == 0 and stats["deleted"] == 0
+        assert d["egress_cents"] == pytest.approx(
+            mig.egress_cents, rel=1e-9, abs=1e-15)
+        assert d["penalty_cents"] == pytest.approx(
+            mig.penalty_cents, rel=1e-9, abs=1e-15)
+        assert sum(d.values()) == pytest.approx(
+            mig.total_move_cents, rel=1e-9, abs=1e-15)
+    moves = sum(r.n_moved for r in eng.history)
+    deferred = sum(r.n_deferred for r in eng.history)
+    assert moves > 0 and deferred > 0     # masks actually bit both ways

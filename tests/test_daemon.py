@@ -473,3 +473,33 @@ def test_amortize_oversized_rejected_outside_batch_mode():
     e = _stream_engine()
     with pytest.raises(ValueError, match="batch-mode only"):
         ReoptimizationDaemon(e, amortize_oversized=True)
+
+
+def test_stream_forecast_history_survives_transient_absence():
+    """Rolling-window churn drops a partition from one batch and brings it
+    back in the next; its forecast calibration must survive. Only
+    ``forecast_window`` CONSECUTIVE absences retire the history."""
+    from repro.core.stream import occurrence_keys
+
+    class _P:
+        def __init__(self, *files):
+            self.files = frozenset(files)
+
+    eng = _stream_engine()
+    d = ReoptimizationDaemon(eng, forecast_fn=lambda h: float(np.mean(h)),
+                             forecast_window=2)
+    a, b = _P("d0/0"), _P("d1/0")
+    ka = occurrence_keys([a])[0]
+    d._project_stream([a, b], np.array([4.0, 7.0]))
+    assert ka in d._rho_hist
+    # absent one batch: calibration retained, miss counter starts
+    d._project_stream([b], np.array([7.0]))
+    assert ka in d._rho_hist and d._rho_miss[ka] == 1
+    # reappears: forecast still blends the pre-absence observation
+    out = d._project_stream([a, b], np.array([6.0, 7.0]))
+    assert out[0] == pytest.approx(5.0)           # mean(4.0, 6.0)
+    assert ka not in d._rho_miss
+    # forecast_window consecutive absences -> history and counter purged
+    d._project_stream([b], np.array([7.0]))
+    d._project_stream([b], np.array([7.0]))
+    assert ka not in d._rho_hist and ka not in d._rho_miss

@@ -103,3 +103,100 @@ def test_kernel_ridge():
     y = X[:, 0] * X[:, 1]
     m = ml.KernelRidge(alpha=1e-3).fit(X[:150], y[:150])
     assert ml.r2(y[150:], m.predict(X[150:])) > 0.8
+
+
+# ------------------------------------------------- atomicity / validation
+def _meter_sig(s):
+    m = s.meter
+    return (m.storage_cents, m.read_cents, m.write_cents, m.penalty_cents,
+            m.egress_cents, m.n_reads, m.n_writes)
+
+
+def test_put_checksum_mismatch_bills_and_mutates_nothing():
+    s = TieredStore()
+    from repro.storage.store import ChecksumError
+    with pytest.raises(ChecksumError):
+        s.put("a", b"x" * 1000, tier=1, expect_checksum="0" * 64)
+    assert not s.has("a") and _meter_sig(s) == _meter_sig(TieredStore())
+
+
+def test_replace_survives_kill_between_delete_and_put():
+    """Regression for the partial-failure billing bug: a re-encode that dies
+    after the delete half must NOT leave the early-delete penalty billed
+    with the source gone. ``replace`` commits delete+put+egress in one
+    locked step, so a checksum failure leaves object and meter untouched."""
+    from repro.storage.store import ChecksumError
+    s = TieredStore()
+    raw = b"y" * 2_000_000
+    s.put("a", raw, tier=3)            # archive: 6-month minimum stay
+    s.advance_months(1.0)
+    sig, tier, pay = _meter_sig(s), s.tier_of("a"), s.get("a")
+    sig = _meter_sig(s)                # include the get we just billed
+    with pytest.raises(ChecksumError):
+        s.replace("a", raw, new_tier=1, codec="zlib-1",
+                  expect_checksum="f" * 64)
+    assert _meter_sig(s) == sig        # no penalty, no write, no egress
+    assert s.tier_of("a") == tier and s.codec_of("a") == "none"
+    assert s.get("a") == pay
+
+
+def test_replace_survives_compress_failure(monkeypatch):
+    """Same contract when the put half itself dies (codec blows up):
+    nothing billed, source object intact."""
+    import repro.storage.store as store_mod
+    s = TieredStore()
+    s.put("a", b"z" * 500_000, tier=3)
+    s.advance_months(0.5)
+    sig = _meter_sig(s)
+
+    class _Boom:
+        def compress(self, raw):
+            raise RuntimeError("codec died mid-flight")
+
+    monkeypatch.setattr(store_mod, "codec_by_name", lambda name: _Boom())
+    with pytest.raises(RuntimeError):
+        s.replace("a", b"z" * 500_000, new_tier=1, codec="zlib-1")
+    monkeypatch.undo()
+    assert _meter_sig(s) == sig
+    assert s.tier_of("a") == 3 and s.get("a") == b"z" * 500_000
+
+
+def _store_plan():
+    from repro.core.engine import (CompressStage, PartitionedData,
+                                   PlacementEngine, ScopeConfig)
+    raws = [bytes([65 + i]) * (200_000 + 50_000 * i) for i in range(4)]
+    cfg = ScopeConfig(tier_whitelist=(0, 1, 2), months=2.0)
+    eng = PlacementEngine(azure_table(), cfg)
+    data = PartitionedData(
+        partitions=[None] * 4, tables=[None] * 4, raw_bytes=raws,
+        spans_gb=np.array([len(b) / 1e9 for b in raws]),
+        rho=np.array([0.05, 40.0, 0.02, 800.0]))
+    return eng, eng.solve(CompressStage(cfg)(data, azure_table()))
+
+
+def test_plan_ops_validate_shapes_before_mutating():
+    """Wrong-length keys/payloads and unknown keys raise ValueError with
+    the store bit-for-bit untouched — no half-applied plans."""
+    eng, plan = _store_plan()
+    s = TieredStore(eng.table)
+    with pytest.raises(ValueError, match="keys has 1 entries"):
+        s.apply_plan(plan, keys=["only-one"])
+    assert len(list(s.keys())) == 0 and _meter_sig(s) == _meter_sig(
+        TieredStore(eng.table))
+    keys = s.apply_plan(plan)
+    s.advance_months(2.0)
+    rho2 = plan.problem.rho.copy()
+    rho2[0] *= 5000.0
+    rho2[3] /= 5000.0
+    mig = eng.reoptimize(plan, rho2, months_held=2.0)
+    assert mig.n_moved >= 1
+    sig = _meter_sig(s)
+    tiers = {k: s.tier_of(k) for k in keys}
+    with pytest.raises(ValueError, match="keys has 2 entries"):
+        s.migrate(mig, keys[:2])
+    with pytest.raises(ValueError, match="unknown object keys"):
+        s.migrate(mig, ["ghost"] + keys[1:])
+    with pytest.raises(ValueError, match="payloads has 1 entries"):
+        s.sync_plan(mig.plan, payloads=[b"x"])
+    assert _meter_sig(s) == sig
+    assert {k: s.tier_of(k) for k in keys} == tiers

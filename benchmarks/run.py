@@ -22,6 +22,7 @@ MODULES = [
     ("multicloud", "benchmarks.bench_multicloud"),
     ("fleet", "benchmarks.bench_fleet"),
     ("migrator", "benchmarks.bench_migrator"),
+    ("forecast", "benchmarks.bench_forecast"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

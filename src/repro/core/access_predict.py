@@ -28,6 +28,13 @@ def optimal_tiers(w: Workload, table: CostTable, lo: int, hi: int,
                   latency_sla: float = np.inf) -> np.ndarray:
     """Ground-truth labels: per-dataset cost-optimal tier for months [lo,hi),
     restricted to the given tier subset (e.g. Hot/Cool for Table III)."""
+    lo, hi = int(lo), int(hi)
+    if hi <= lo:
+        raise ValueError(f"optimal_tiers needs a non-empty month window: "
+                         f"got [{lo}, {hi})")
+    if lo < 0 or hi > w.n_months:
+        raise ValueError(f"label window [{lo}, {hi}) falls outside the "
+                         f"workload's [0, {w.n_months}) months")
     spans = np.array([d.size_gb for d in w.datasets])
     rho = w.reads_in(lo, hi) * read_fraction
     months = hi - lo
@@ -57,7 +64,23 @@ def train_tier_predictor(
     tiers: Sequence[int] = (1, 2), history: int = 4,
     model: Optional[object] = None,
 ) -> Tuple[object, TierPredictionReport]:
-    """Out-of-time: fit on [train_month, +h) labels, test on the next window."""
+    """Out-of-time: fit on [train_month, +h) labels, test on the next window.
+
+    Requires ``train_month + horizon < w.n_months`` so the test window
+    ``[t+h, min(t+2h, n_months))`` is non-empty — otherwise the metrics
+    would be computed on zero labels (or an inverted slice).
+    """
+    train_month, horizon = int(train_month), int(horizon)
+    if horizon < 1:
+        raise ValueError(f"horizon must be >= 1 month, got {horizon}")
+    if train_month < 0:
+        raise ValueError(f"train_month must be >= 0, got {train_month}")
+    if train_month + horizon >= w.n_months:
+        raise ValueError(
+            f"out-of-time test window [{train_month + horizon}, "
+            f"{min(train_month + 2 * horizon, w.n_months)}) is empty: "
+            f"train_month + horizon must be < n_months "
+            f"(= {w.n_months}); shrink train_month or horizon")
     tiers = list(tiers)
     y_tr = optimal_tiers(w, table, train_month, train_month + horizon, tiers)
     y_te = optimal_tiers(w, table, train_month + horizon,

@@ -46,6 +46,10 @@ import numpy as np
 from repro.core.engine import (MigrationPlan, PlacementEngine, PlacementPlan,
                                StreamingEngine, drift_gate)
 from repro.core.fleet import FleetEngine
+# the shared forecasting sanity layer lives in core/forecast.py;
+# re-exported here because linear_trend_forecast is the daemon's default
+# forecast_fn building block (and the historical import location)
+from repro.core.forecast import clamp_rho, linear_trend_forecast  # noqa: F401
 from repro.core.optassign import budgeted_moves
 from repro.core.stream import occurrence_keys
 
@@ -104,27 +108,6 @@ class DaemonCycleReport:
     attempted_cents: float = 0.0      # spent + retry + failed — what the
     # per-cycle budget cap is enforced against (== spent_cents without a
     # migrator: the synchronous path lands everything it bills)
-
-
-def linear_trend_forecast(history: Sequence, horizon: float = 1.0,
-                          clip_min: float = 0.0) -> np.ndarray:
-    """Least-squares linear trend over a rho history, extrapolated
-    ``horizon`` cycles ahead (clamped non-negative).
-
-    ``history`` is a sequence of per-cycle observations — scalars in
-    streaming mode (one partition's rho per cycle), (N,) vectors in batch
-    mode. The default ``forecast_fn`` building block; swap in an
-    ``access_predict``-style fitted model for feature-driven projection.
-    """
-    h = np.asarray(history, np.float64)
-    T = h.shape[0]
-    if T < 2:
-        return h[-1]
-    t = np.arange(T, dtype=np.float64)
-    tm = t.mean()
-    ctr = (t - tm).reshape((T,) + (1,) * (h.ndim - 1))
-    slope = (ctr * (h - h.mean(0))).sum(0) / (ctr * ctr).sum()
-    return np.maximum(h[-1] + horizon * slope, clip_min)
 
 
 class ReoptimizationDaemon:
@@ -216,6 +199,16 @@ class ReoptimizationDaemon:
         if plans is not None and not self.fleet:
             raise ValueError("plans= is fleet mode — hand the daemon a "
                              "FleetEngine (single-tenant modes take plan=)")
+        if isinstance(forecast_fn, (list, tuple)):
+            if not self.fleet:
+                raise ValueError("a forecast_fn sequence is fleet mode "
+                                 "(one per tenant); single-tenant modes "
+                                 "take a single callable")
+            if plans is not None and len(forecast_fn) != len(plans):
+                raise ValueError(f"forecast_fn= needs one callable per "
+                                 f"tenant ({len(plans)}), got "
+                                 f"{len(forecast_fn)}")
+            self.forecast_fn = list(forecast_fn)
         if amortize_oversized and (self.streaming or self.fleet):
             raise ValueError("amortize_oversized is batch-mode only")
         if amortize_oversized and migrator is not None:
@@ -474,9 +467,11 @@ class ReoptimizationDaemon:
         for t in range(T):
             obs = np.asarray(rho_obs[t], np.float64)
             self._hist_f[t].append(obs)
-            rhos.append(np.asarray(
-                self.forecast_fn(list(self._hist_f[t])), np.float64)
-                if self.forecast_fn is not None else obs)
+            fn = (self.forecast_fn[t]
+                  if isinstance(self.forecast_fn, list)
+                  else self.forecast_fn)
+            rhos.append(np.asarray(fn(list(self._hist_f[t])), np.float64)
+                        if fn is not None else obs)
         held = [mh + months for mh in self._months_held_f]
         migs, _ = self.engine.reoptimize(
             self.plans, rhos, months_held=held,
@@ -547,12 +542,21 @@ class ReoptimizationDaemon:
     def _project_stream(self, parts, rho_obs: np.ndarray) -> np.ndarray:
         keys = occurrence_keys(parts)
         out = rho_obs.astype(np.float64).copy()
+        # context protocol: a forecast_fn carrying stream_context=True
+        # (e.g. AccessForecaster.stream_forecast_fn) also receives the
+        # partition's file-set key and stored span — the paper's
+        # strongest feature — alongside the scalar rho history
+        wants_ctx = bool(getattr(self.forecast_fn, "stream_context", False))
         for i, k in enumerate(keys):
             h = self._rho_hist.setdefault(
                 k, collections.deque(maxlen=self.forecast_window))
             h.append(float(rho_obs[i]))
             self._rho_miss.pop(k, None)
-            out[i] = float(self.forecast_fn(list(h)))
+            if wants_ctx:
+                out[i] = float(self.forecast_fn(
+                    list(h), key=k, span_gb=float(parts[i].span)))
+            else:
+                out[i] = float(self.forecast_fn(list(h)))
         # retire history only after forecast_window CONSECUTIVE absences:
         # a partition that drops out of one batch and reappears in the
         # next (rolling-window churn) keeps its calibration

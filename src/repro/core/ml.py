@@ -52,6 +52,34 @@ def confusion(y, p, n_classes: int) -> np.ndarray:
     return m
 
 
+def reliability_bins(p, y, n_bins: int = 10):
+    """Reliability diagram data for binary probabilities: per bin over
+    [0, 1], (count, mean predicted p, empirical positive fraction).
+    Empty bins report count 0 and NaN means."""
+    p = np.asarray(p, np.float64)
+    y = np.asarray(y, np.float64)
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    idx = np.clip(np.digitize(p, edges[1:-1]), 0, n_bins - 1)
+    count = np.bincount(idx, minlength=n_bins).astype(float)
+    with np.errstate(invalid="ignore"):
+        mean_p = np.bincount(idx, weights=p, minlength=n_bins) \
+            / np.where(count > 0, count, np.nan)
+        frac_pos = np.bincount(idx, weights=y, minlength=n_bins) \
+            / np.where(count > 0, count, np.nan)
+    return count, mean_p, frac_pos
+
+
+def expected_calibration_error(p, y, n_bins: int = 10) -> float:
+    """ECE: count-weighted mean |empirical frequency - mean predicted p|
+    over occupied probability bins. 0 = perfectly calibrated."""
+    count, mean_p, frac_pos = reliability_bins(p, y, n_bins)
+    occ = count > 0
+    if not occ.any():
+        return 0.0
+    gap = np.abs(frac_pos[occ] - mean_p[occ])
+    return float((gap * count[occ]).sum() / count[occ].sum())
+
+
 # ---------------------------------------------------------------- CART trees
 @dataclasses.dataclass
 class _Node:
@@ -164,8 +192,73 @@ class RandomForest:
     def predict(self, X: np.ndarray) -> np.ndarray:
         if self.task == "reg":
             return np.mean([t.predict(X) for t in self.trees], axis=0)
-        probs = np.mean([t.predict_proba(X) for t in self.trees], axis=0)
-        return probs.argmax(1)
+        return self.predict_proba(X).argmax(1)
+
+    def predict_proba(self, X: np.ndarray) -> np.ndarray:
+        """(n, n_classes) vote fractions across the forest. These are NOT
+        calibrated probabilities — run them through a fitted
+        :class:`IsotonicCalibrator` before treating them as such."""
+        if self.task != "clf":
+            raise ValueError("predict_proba is classification-only "
+                             "(task='clf')")
+        if not self.trees:
+            raise ValueError("predict_proba before fit")
+        return np.mean([t.predict_proba(X) for t in self.trees], axis=0)
+
+
+class IsotonicCalibrator:
+    """Monotone probability calibration by isotonic regression (PAVA).
+
+    Maps raw classifier scores (e.g. :class:`RandomForest` vote fractions)
+    to calibrated P(y=1): fit finds the least-squares *non-decreasing*
+    function of the score on held-out (score, outcome) pairs via
+    pool-adjacent-violators, so score ranking is preserved while the
+    outputs become empirical frequencies. ``predict`` interpolates
+    linearly between the fitted block means and clips to [0, 1] — the
+    isotonic cousin of binned Platt scaling, but bin placement is learned
+    from the violator structure instead of fixed.
+    """
+
+    def __init__(self):
+        self.x_: Optional[np.ndarray] = None   # block score positions
+        self.v_: Optional[np.ndarray] = None   # block calibrated values
+
+    def fit(self, scores, outcomes) -> "IsotonicCalibrator":
+        s = np.asarray(scores, np.float64).ravel()
+        y = np.asarray(outcomes, np.float64).ravel()
+        if s.shape != y.shape:
+            raise ValueError(f"scores {s.shape} vs outcomes {y.shape}")
+        if len(s) == 0:
+            raise ValueError("cannot calibrate on an empty set")
+        order = np.argsort(s, kind="stable")
+        xs, ys = s[order], y[order]
+        # pool adjacent violators: merge blocks while means decrease
+        bx: List[float] = []     # weighted mean score per block
+        bv: List[float] = []     # weighted mean outcome per block
+        bw: List[float] = []     # block weight
+        for x, t in zip(xs, ys):
+            bx.append(float(x)); bv.append(float(t)); bw.append(1.0)
+            while len(bv) > 1 and bv[-2] >= bv[-1]:
+                w = bw[-2] + bw[-1]
+                bv[-2] = (bv[-2] * bw[-2] + bv[-1] * bw[-1]) / w
+                bx[-2] = (bx[-2] * bw[-2] + bx[-1] * bw[-1]) / w
+                bw[-2] = w
+                del bv[-1], bx[-1], bw[-1]
+        x_ = np.asarray(bx)
+        # interpolation needs strictly increasing x: nudge ties apart
+        # (duplicate scores always land in one block, so ties are rare)
+        for i in range(1, len(x_)):
+            if x_[i] <= x_[i - 1]:
+                x_[i] = np.nextafter(x_[i - 1], np.inf)
+        self.x_ = x_
+        self.v_ = np.clip(np.asarray(bv), 0.0, 1.0)
+        return self
+
+    def predict(self, scores) -> np.ndarray:
+        if self.x_ is None:
+            raise ValueError("predict before fit")
+        s = np.asarray(scores, np.float64)
+        return np.clip(np.interp(s, self.x_, self.v_), 0.0, 1.0)
 
 
 # --------------------------------------------------------------------- (J)MLP

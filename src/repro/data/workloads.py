@@ -109,7 +109,16 @@ def generate_workload(n_datasets: int = 200, n_months: int = 24,
 
 def feature_matrix(w: Workload, at_month: int, history: int = 4) -> np.ndarray:
     """Paper §IV-C features: (i) size, (ii) age in months, (iii/iv) monthly
-    read and write aggregates for the last ``history`` months."""
+    read and write aggregates for the last ``history`` months.
+
+    ``at_month`` is clamped to ``[0, n_months]``: before month 0 there is
+    no history (the window is all zeros), and a negative index must never
+    reach the slice below — ``reads[0:-1]`` would silently read from the
+    *end* of the trace and poison the training features.
+    """
+    if history < 0:
+        raise ValueError(f"history must be >= 0, got {history}")
+    at_month = min(max(int(at_month), 0), w.n_months)
     rows = []
     for d in w.datasets:
         lo = max(at_month - history, 0)

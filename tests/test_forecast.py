@@ -1,0 +1,439 @@
+"""AccessForecaster + forecasting-path bug sweep: window validation,
+early-month feature clamps, trend clamps, isotonic calibration, out-of-time
+(no-leakage) fitting, seeded determinism, forecast_fn=None daemon parity in
+all three modes, and the streaming context protocol."""
+
+import numpy as np
+import pytest
+
+from repro.core import ml
+from repro.core.access_predict import optimal_tiers, train_tier_predictor
+from repro.core.costs import azure_table
+from repro.core.daemon import MigrationBudget, ReoptimizationDaemon
+from repro.core.engine import (PlacementEngine, PlacementProblem, ScopeConfig,
+                               StreamingEngine)
+from repro.core.fleet import FleetEngine
+from repro.core.forecast import (AccessForecaster, clamp_rho,
+                                 linear_trend_forecast)
+from repro.data.workloads import feature_matrix, generate_workload
+
+TAB = azure_table()
+SPIKY = {"decreasing": 0.2, "constant": 0.1, "periodic": 0.35,
+         "spike": 0.15, "cold": 0.2}
+
+
+def _workload(n=60, months=18, seed=7):
+    return generate_workload(n_datasets=n, n_months=months, seed=seed,
+                             pattern_probs=SPIKY)
+
+
+def _fitted(w, **kw):
+    kw.setdefault("n_trees", 10)
+    fc = AccessForecaster(TAB, tiers=(1, 2), horizon=2, history=4, **kw)
+    fc.fit(w, fit_month=12)
+    return fc
+
+
+# ------------------------------------------------------------- sanity layer
+def test_clamp_rho_bounds_and_nonfinite():
+    assert clamp_rho(-3.0) == 0.0
+    assert clamp_rho(np.nan) == 0.0
+    assert clamp_rho(np.inf, hi=5.0) == 0.0   # non-finite collapses to lo
+    assert clamp_rho(2.0) == 2.0
+    out = clamp_rho(np.array([2.0, -1.0, np.nan]), hi=1.5)
+    assert out.tolist() == [1.5, 0.0, 0.0]
+    # per-element upper bounds (the spike cap is a vector)
+    out = clamp_rho(np.array([5.0, 5.0]), hi=np.array([3.0, 10.0]))
+    assert out.tolist() == [3.0, 5.0]
+
+
+def test_linear_trend_clamps_degenerate_histories():
+    # length-1 history: last value, clamped (was returned unclamped)
+    assert linear_trend_forecast([3.0]) == 3.0
+    assert linear_trend_forecast([-5.0]) == 0.0
+    # all-constant: no slope, the constant survives
+    assert linear_trend_forecast([2.0, 2.0, 2.0]) == pytest.approx(2.0)
+    # steep negative trend extrapolates below zero -> clamped
+    assert linear_trend_forecast([9.0, 3.0, 0.1]) == pytest.approx(0.0)
+    # vector histories clamp element-wise
+    out = linear_trend_forecast([np.array([4.0, 1.0]), np.array([1.0, 2.0])])
+    np.testing.assert_allclose(out, [0.0, 3.0])
+    with pytest.raises(ValueError):
+        linear_trend_forecast([])
+    # a NaN observation cannot escape the sanity layer
+    assert np.isfinite(linear_trend_forecast([1.0, np.nan]))
+
+
+# ----------------------------------------------------- window validation bugs
+def test_optimal_tiers_rejects_degenerate_windows():
+    w = _workload(n=10, months=8)
+    with pytest.raises(ValueError, match="non-empty"):
+        optimal_tiers(w, TAB, 5, 5, (1, 2))
+    with pytest.raises(ValueError, match="non-empty"):
+        optimal_tiers(w, TAB, 6, 4, (1, 2))
+    with pytest.raises(ValueError, match="outside"):
+        optimal_tiers(w, TAB, 6, 9, (1, 2))
+    with pytest.raises(ValueError, match="outside"):
+        optimal_tiers(w, TAB, -1, 3, (1, 2))
+    assert len(optimal_tiers(w, TAB, 4, 8, (1, 2))) == 10
+
+
+def test_train_tier_predictor_validates_out_of_time_window():
+    w = _workload(n=12, months=10)
+    # t + h == n_months: the test window [t+h, min(t+2h, n)) is empty
+    with pytest.raises(ValueError, match="train_month \\+ horizon"):
+        train_tier_predictor(w, TAB, train_month=8, horizon=2)
+    # t + h > n_months: previously an *inverted* slice
+    with pytest.raises(ValueError, match="train_month \\+ horizon"):
+        train_tier_predictor(w, TAB, train_month=9, horizon=2)
+    with pytest.raises(ValueError, match="horizon"):
+        train_tier_predictor(w, TAB, train_month=4, horizon=0)
+    with pytest.raises(ValueError, match="train_month"):
+        train_tier_predictor(w, TAB, train_month=-1, horizon=2)
+    clf, rep = train_tier_predictor(w, TAB, train_month=6, horizon=2)
+    assert rep.confusion.sum() == 12
+
+
+def test_feature_matrix_clamps_early_months():
+    w = _workload(n=8, months=12)
+    H = 4
+    X0 = feature_matrix(w, 0, H)
+    # month 0: no history exists — read/write aggregates are all zero
+    np.testing.assert_array_equal(X0[:, 2:], 0.0)
+    np.testing.assert_allclose(
+        X0[:, 0], [np.log1p(d.size_gb) for d in w.datasets])
+    np.testing.assert_array_equal(X0[:, 1], [d.age_at(0) for d in w.datasets])
+    # month 1: the window is [0,0,0, month-0 traffic]
+    X1 = feature_matrix(w, 1, H)
+    np.testing.assert_array_equal(X1[:, 2:5], 0.0)
+    np.testing.assert_array_equal(X1[:, 5], [d.reads[0] for d in w.datasets])
+    np.testing.assert_array_equal(X1[:, 6:9], 0.0)
+    np.testing.assert_array_equal(X1[:, 9], [d.writes[0] for d in w.datasets])
+    # a negative month clamps to month 0 instead of slicing from the END
+    # of the trace (reads[0:-1] — the silent feature-poisoning bug)
+    np.testing.assert_array_equal(feature_matrix(w, -1, H), X0)
+    np.testing.assert_array_equal(feature_matrix(w, -3, H), X0)
+    with pytest.raises(ValueError):
+        feature_matrix(w, 3, -1)
+
+
+# ----------------------------------------------------------- reliability layer
+def test_random_forest_predict_proba():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(80, 3))
+    y = (X[:, 0] + 0.1 * rng.normal(size=80) > 0).astype(int)
+    clf = ml.RandomForest(n_trees=8, max_depth=4, task="clf", n_classes=2)
+    clf.fit(X, y)
+    p = clf.predict_proba(X)
+    assert p.shape == (80, 2)
+    np.testing.assert_allclose(p.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_array_equal(p.argmax(1), clf.predict(X))
+    reg = ml.RandomForest(n_trees=2, task="reg")
+    reg.fit(X, X[:, 0])
+    with pytest.raises(ValueError):
+        reg.predict_proba(X)
+
+
+def test_isotonic_calibrator_pava():
+    # known instance: the (0.2 -> 1, 0.3 -> 0) violator pair pools to 0.5
+    c = ml.IsotonicCalibrator().fit([0.1, 0.2, 0.3, 0.4], [0, 1, 0, 1])
+    np.testing.assert_allclose(c.predict([0.1, 0.25, 0.4]), [0.0, 0.5, 1.0])
+    # output is monotone non-decreasing over the whole unit interval
+    grid = c.predict(np.linspace(0.0, 1.0, 101))
+    assert (np.diff(grid) >= -1e-12).all()
+    assert grid.min() >= 0.0 and grid.max() <= 1.0
+    # perfectly separable scores reproduce the outcomes
+    c2 = ml.IsotonicCalibrator().fit([0.1, 0.2, 0.8, 0.9], [0, 0, 1, 1])
+    np.testing.assert_allclose(c2.predict([0.15, 0.85]), [0.0, 1.0])
+    with pytest.raises(ValueError):
+        ml.IsotonicCalibrator().fit([], [])
+    with pytest.raises(ValueError):
+        ml.IsotonicCalibrator().predict([0.5])
+
+
+def test_forecaster_calibration_reliability():
+    """The reliability layer may never make calibration worse than the raw
+    forest votes (ECE on the held-out out-of-time slice), and the
+    calibrated error stays inside a loose absolute tolerance."""
+    w = _workload(n=120, months=20, seed=5)
+    fc = _fitted(w, n_trees=16, seed=1)
+    rep = fc.fit_report
+    assert rep.calibrated
+    assert rep.ece_cal <= rep.ece_raw + 0.05
+    assert rep.ece_cal < 0.25
+    # calibrated probabilities are probabilities
+    p = fc.predict_p_hot(feature_matrix(w, 13, 4))
+    assert p.min() >= 0.0 and p.max() <= 1.0
+
+
+# ------------------------------------------------------- out-of-time fitting
+def test_forecaster_fit_is_out_of_time():
+    w = _workload()
+    fc = _fitted(w)
+    rep = fc.fit_report
+    # no label window may peek at or beyond fit_month
+    assert all(hi <= rep.fit_month for _, hi in rep.label_windows)
+    # the calibration slice is strictly LATER than every training month
+    assert min(rep.cal_months) > max(rep.train_months)
+    with pytest.raises(ValueError, match="beyond the trace"):
+        fc.fit(w, fit_month=99)
+    with pytest.raises(ValueError, match="usable train months"):
+        fc.fit(w, fit_month=3)        # only month 1 usable with horizon 2
+
+
+def test_forecaster_refits_stay_out_of_time():
+    w = _workload()
+    fc = _fitted(w, refit_every=3)
+    fc.bind(month0=11)
+    hist = [np.array([d.reads[m] for d in w.datasets]) for m in range(11, 17)]
+    for t in range(1, len(hist) + 1):
+        fc.forecast_rho(hist[:t])
+    assert fc.refits_, "refit cadence never fired"
+    # after the last refit the report covers the refit month, and every
+    # label window still ends at or before it (daemon never trains on
+    # months it has not observed)
+    assert fc.fit_report.fit_month == fc.refits_[-1]
+    assert all(hi <= fc.fit_report.fit_month
+               for _, hi in fc.fit_report.label_windows)
+    assert fc.refits_ == sorted(set(fc.refits_))
+
+
+# ------------------------------------------------------------- determinism
+def _batch_problem(w, rho0, cfg):
+    spans = np.array([d.size_gb for d in w.datasets])
+    N = len(spans)
+    return PlacementProblem(spans_gb=spans, rho=rho0,
+                            current_tier=np.full(N, -1),
+                            R=np.ones((N, 1)), D=np.zeros((N, 1)),
+                            schemes=("none",), table=TAB, cfg=cfg)
+
+
+def _run_forecast_daemon(seed):
+    w = generate_workload(n_datasets=40, n_months=18, seed=seed,
+                          pattern_probs=SPIKY)
+    cfg = ScopeConfig(tier_whitelist=(1, 2), use_compression=False,
+                      months=1.0)
+    eng = PlacementEngine(TAB, cfg)
+    fc = _fitted(w, seed=0)
+    fc.bind(month0=11)
+    rho0 = np.array([float(d.reads[11]) for d in w.datasets])
+    d = ReoptimizationDaemon(eng, plan=eng.solve(_batch_problem(w, rho0, cfg)),
+                             forecast_fn=fc.forecast_rho, rho_abs_tol=1.0)
+    tiers, rhos = [], []
+    for m in range(12, 17):
+        obs = np.array([float(d_.reads[m - 1]) for d_ in w.datasets])
+        d.step(obs, months=1.0)
+        tiers.append(d.plan.assignment.tier.copy())
+        rhos.append(np.asarray(d.plan.problem.rho, float).copy())
+    return tiers, rhos
+
+
+def test_forecast_driven_daemon_is_deterministic():
+    """Same workload seed => bit-identical forecasts and plans."""
+    t1, r1 = _run_forecast_daemon(21)
+    t2, r2 = _run_forecast_daemon(21)
+    for a, b in zip(t1, t2):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(r1, r2):
+        np.testing.assert_array_equal(a, b)
+    # and every projected rho passed the sanity layer
+    for r in r1:
+        assert np.isfinite(r).all() and (r >= 0.0).all()
+
+
+# ------------------------------------------------- forecast_fn=None parity
+def test_forecast_none_batch_parity():
+    """With forecast_fn=None the daemon IS the reactive engine chain."""
+    w = _workload(n=30, months=16, seed=3)
+    cfg = ScopeConfig(tier_whitelist=(1, 2), use_compression=False,
+                      months=1.0)
+    eng = PlacementEngine(TAB, cfg)
+    rho0 = np.array([float(d.reads[10]) for d in w.datasets])
+    plan = eng.solve(_batch_problem(w, rho0, cfg))
+    daemon = ReoptimizationDaemon(eng, plan=plan, forecast_fn=None,
+                                  rho_abs_tol=0.0, rho_rel_tol=0.25)
+    ref_plan, held, ref = plan, np.zeros(plan.problem.n), \
+        np.asarray(plan.problem.rho, float).copy()
+    from repro.core.engine import drift_gate
+    for m in range(11, 15):
+        obs = np.array([float(d.reads[m]) for d in w.datasets])
+        daemon.step(obs, months=1.0)
+        held = held + 1.0
+        mig = eng.reoptimize(ref_plan, obs, months_held=held,
+                             rho_rel_tol=0.25, rho_abs_tol=0.0, rho_ref=ref)
+        held = np.where(mig.moved, 0.0, held)
+        drifted = drift_gate(obs, ref, 0.25, 0.0)
+        ref = np.where(~mig.moved & ~drifted, ref, obs)
+        ref_plan = mig.plan
+        np.testing.assert_array_equal(daemon.plan.assignment.tier,
+                                      ref_plan.assignment.tier)
+        assert daemon.plan.report.total_cents == ref_plan.report.total_cents
+
+
+def test_forecast_none_stream_parity():
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    sizes = {f"d{i}/{j}": 0.5 + 0.1 * j for i in range(5) for j in range(3)}
+    batches = [[(("d0/0", "d0/1"), 300.0), (("d1/0",), 0.01)],
+               [(("d0/0", "d0/1"), 0.5), (("d1/0",), 250.0)],
+               [(("d0/0", "d0/1"), 0.5), (("d1/0",), 260.0)]]
+    e1 = StreamingEngine(TAB, cfg, sizes, s_thresh=5.0, window=1,
+                         drift_threshold=np.inf)
+    migs = [e1.ingest_and_reoptimize(b, months=1.0) for b in batches]
+    e2 = StreamingEngine(TAB, cfg, sizes, s_thresh=5.0, window=1,
+                         drift_threshold=np.inf)
+    d = ReoptimizationDaemon(e2, forecast_fn=None)
+    reps = d.run(batches, months=1.0)
+    for m, r in zip(migs, reps):
+        assert r.spent_cents == m.total_move_cents
+        assert r.steady_cents == m.plan.report.total_cents
+    assert np.array_equal(e2.plan.assignment.tier, e1.plan.assignment.tier)
+
+
+def test_forecast_none_fleet_parity():
+    cfg = ScopeConfig(schemes=("none",), use_compression=False)
+    rng = np.random.default_rng(4)
+    pe, fe = PlacementEngine(TAB, cfg), FleetEngine(TAB, cfg)
+    probs = []
+    for n in (5, 8, 3):
+        spans = rng.uniform(0.5, 40.0, n)
+        probs.append(PlacementProblem(
+            spans_gb=spans, rho=rng.gamma(1.0, 20.0, n),
+            current_tier=np.full(n, -1), R=np.ones((n, 1)),
+            D=np.zeros((n, 1)), schemes=("none",), table=TAB, cfg=cfg))
+    fleet = ReoptimizationDaemon(fe, plans=[pe.solve(p) for p in probs],
+                                 forecast_fn=None)
+    singles = [ReoptimizationDaemon(pe, plan=pe.solve(p), forecast_fn=None)
+               for p in probs]
+    for cycle in range(3):
+        rhos = [p.rho * rng.uniform(0.2, 4.0, p.n) for p in probs]
+        fleet.step(rhos)
+        for d, r in zip(singles, rhos):
+            d.step(r)
+        for t, d in enumerate(singles):
+            np.testing.assert_array_equal(fleet.plans[t].assignment.tier,
+                                          d.plan.assignment.tier)
+
+
+# -------------------------------------------------------- projection algebra
+def test_projection_interpolates_between_trend_and_hot_level(monkeypatch):
+    w = _workload()
+    fc = _fitted(w)
+    fc.bind(month0=11)
+    hist = [np.full(3, 10.0), np.full(3, 10.0), np.full(3, 10.0)]
+
+    monkeypatch.setattr(fc, "predict_p_hot", lambda X: np.zeros(len(X)))
+    base_only = AccessForecaster.forecast_rho(fc, hist)
+    np.testing.assert_allclose(base_only, 10.0)   # p=0 -> pure trend
+
+    fc.bind(month0=11)
+    monkeypatch.setattr(fc, "predict_p_hot", lambda X: np.ones(len(X)))
+    hot = AccessForecaster.forecast_rho(fc, hist)
+    np.testing.assert_allclose(hot, np.maximum(10.0, fc.hot_rho_))
+
+    fc.bind(month0=11)
+    monkeypatch.setattr(fc, "predict_p_hot", lambda X: np.full(len(X), 0.5))
+    mid = AccessForecaster.forecast_rho(fc, hist)
+    np.testing.assert_allclose(mid, (base_only + hot) / 2.0)
+
+    # the spike cap binds: even p=1 cannot exceed spike_mult * max(peak, hot)
+    fc.bind(month0=11)
+    monkeypatch.setattr(fc, "predict_p_hot", lambda X: np.ones(len(X)))
+    out = AccessForecaster.forecast_rho(fc, hist)
+    assert (out <= fc.spike_mult * np.maximum(10.0, fc.hot_rho_) + 1e-9).all()
+
+
+def test_forecaster_untrained_falls_back_to_trend():
+    fc = AccessForecaster(TAB, horizon=2, history=4)
+    out = fc.forecast_rho([np.array([5.0, 1.0]), np.array([7.0, 0.5])])
+    np.testing.assert_allclose(out, [9.0, 0.0])   # trend, clamped at 0
+
+
+# ------------------------------------------------------- streaming protocol
+class _RecordingFn:
+    stream_context = True
+
+    def __init__(self):
+        self.calls = []
+
+    def __call__(self, history, key=None, span_gb=None):
+        self.calls.append((tuple(history), key, span_gb))
+        return float(history[-1])
+
+
+def test_stream_daemon_passes_context_to_opted_in_forecast_fn():
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    sizes = {f"d{i}/{j}": 0.5 + 0.1 * j for i in range(4) for j in range(3)}
+    eng = StreamingEngine(TAB, cfg, sizes, s_thresh=5.0, window=1,
+                          drift_threshold=np.inf)
+    fn = _RecordingFn()
+    d = ReoptimizationDaemon(eng, forecast_fn=fn)
+    d.step([(("d0/0", "d0/1"), 100.0), (("d1/0",), 2.0)], months=1.0)
+    assert fn.calls, "context forecast_fn never invoked"
+    for hist, key, span in fn.calls:
+        assert key is not None and span is not None and span > 0.0
+        assert len(hist) >= 1
+    # a plain callable (no stream_context) still gets history only
+    eng2 = StreamingEngine(TAB, cfg, sizes, s_thresh=5.0, window=1,
+                           drift_threshold=np.inf)
+    d2 = ReoptimizationDaemon(eng2, forecast_fn=lambda h: float(h[-1]))
+    rep = d2.step([(("d0/0", "d0/1"), 100.0)], months=1.0)
+    assert rep.n_partitions >= 1
+
+
+def test_stream_forecast_fn_drives_streaming_daemon():
+    w = _workload(n=20, months=16, seed=9)
+    fc = _fitted(w)
+    cfg = ScopeConfig(use_compression=False, months=1.0)
+    sizes = {f"d{i}/{j}": 1.0 for i in range(4) for j in range(2)}
+    eng = StreamingEngine(TAB, cfg, sizes, s_thresh=5.0, window=1,
+                          drift_threshold=np.inf)
+    d = ReoptimizationDaemon(eng, forecast_fn=fc.stream_forecast_fn())
+    for rho in (200.0, 150.0, 0.5):
+        rep = d.step([(("d0/0", "d0/1"), rho), (("d1/0",), 1.0)], months=1.0)
+        assert np.isfinite(rep.steady_cents)
+    rho_now = np.asarray(eng.plan.problem.rho, float)
+    assert np.isfinite(rho_now).all() and (rho_now >= 0.0).all()
+
+
+# ------------------------------------------------------------ fleet wiring
+def test_forecast_fn_sequence_is_fleet_only():
+    cfg = ScopeConfig(use_compression=False, schemes=("none",))
+    eng = PlacementEngine(TAB, cfg)
+    prob = PlacementProblem(spans_gb=np.array([1.0]), rho=np.array([1.0]),
+                            current_tier=np.array([-1]), R=np.ones((1, 1)),
+                            D=np.zeros((1, 1)), schemes=("none",),
+                            table=TAB, cfg=cfg)
+    plan = eng.solve(prob)
+    with pytest.raises(ValueError, match="fleet"):
+        ReoptimizationDaemon(eng, plan=plan,
+                             forecast_fn=[lambda h: h[-1]])
+    fe = FleetEngine(TAB, cfg)
+    with pytest.raises(ValueError, match="one callable per"):
+        ReoptimizationDaemon(fe, plans=[plan, plan],
+                             forecast_fn=[lambda h: h[-1]])
+
+
+def test_fleet_daemon_per_tenant_forecasters():
+    """A forecast_fn list applies each tenant's own forecaster; with
+    identity forecasters the trajectory matches forecast_fn=None."""
+    cfg = ScopeConfig(schemes=("none",), use_compression=False)
+    rng = np.random.default_rng(6)
+    pe, fe = PlacementEngine(TAB, cfg), FleetEngine(TAB, cfg)
+    probs = []
+    for n in (4, 6):
+        probs.append(PlacementProblem(
+            spans_gb=rng.uniform(0.5, 30.0, n), rho=rng.gamma(1.0, 20.0, n),
+            current_tier=np.full(n, -1), R=np.ones((n, 1)),
+            D=np.zeros((n, 1)), schemes=("none",), table=TAB, cfg=cfg))
+    ident = [lambda h: np.asarray(h[-1], float) for _ in probs]
+    d1 = ReoptimizationDaemon(fe, plans=[pe.solve(p) for p in probs],
+                              forecast_fn=ident)
+    d2 = ReoptimizationDaemon(fe, plans=[pe.solve(p) for p in probs],
+                              forecast_fn=None)
+    for cycle in range(3):
+        rhos = [p.rho * rng.uniform(0.3, 3.0, p.n) for p in probs]
+        d1.step(rhos)
+        d2.step(rhos)
+        for t in range(len(probs)):
+            np.testing.assert_array_equal(d1.plans[t].assignment.tier,
+                                          d2.plans[t].assignment.tier)

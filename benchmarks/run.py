@@ -23,6 +23,7 @@ MODULES = [
     ("fleet", "benchmarks.bench_fleet"),
     ("migrator", "benchmarks.bench_migrator"),
     ("forecast", "benchmarks.bench_forecast"),
+    ("sla", "benchmarks.bench_sla"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
@@ -34,6 +35,13 @@ def main() -> None:
                     help="comma-separated tags (e.g. tableII,fig7)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        valid = [tag for tag, _ in MODULES]
+        unknown = sorted(only - set(valid))
+        if unknown:
+            print(f"unknown benchmark tag(s) {unknown}; "
+                  f"valid tags: {', '.join(valid)}", file=sys.stderr)
+            sys.exit(2)
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = []

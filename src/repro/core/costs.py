@@ -49,6 +49,18 @@ class CostTable:
     def num_tiers(self) -> int:
         return int(self.storage_cents_gb_month.shape[0])
 
+    @property
+    def retrieval_latency_ms(self) -> np.ndarray:
+        """Per-tier retrieval latency in milliseconds, shape (L,).
+
+        The same ``ttfb_seconds`` model viewed in SLA units: milliseconds
+        for online tiers, hours-scale values for archive restore (e.g.
+        Azure archive rehydration = 3.6e6 ms). This is the latency the
+        soft-SLA penalty (:func:`sla_penalty_tensor`) prices, while
+        ``latency_feasible`` keeps using seconds for the hard cutoff.
+        """
+        return self.ttfb_seconds * 1e3
+
     def tier_change_cents_gb(self) -> np.ndarray:
         """Delta_{u,v} per GB: read from u + write to v. Shape (L+1, L).
 
@@ -372,6 +384,30 @@ def early_delete_penalty_gb(
     safe = np.maximum(cur, 0)
     due = np.maximum(0.0, table.early_delete_months[safe] - held)
     return np.where(cur >= 0, due * table.storage_cents_gb_month[safe], 0.0)
+
+
+def sla_penalty_tensor(
+    accesses: np.ndarray,          # (N,)  rho — projected # of reads
+    sla_ms: np.ndarray,            # (N,)  per-partition target (inf = none)
+    decomp_sec: np.ndarray,        # (N,K) whole-partition decompression
+    table: CostTable,
+) -> np.ndarray:
+    """Soft-SLA violation penalty tensor, shape (N, L, K).
+
+    penalty[n,l,k] = rho_n * max(0, B_l*1e3 + D_nk*1e3 - sla_ms_n)
+
+    Units are **rho-weighted excess milliseconds** — deliberately not
+    cents. The solver objective adds ``sla_lambda * penalty`` (lambda
+    converts excess-ms to objective units); billing reports the raw
+    penalty of the chosen cells separately and never meters it as cents.
+    Rows with ``sla_ms = inf`` contribute exactly 0.0.
+    """
+    lat_ms = (table.ttfb_seconds[None, :, None]
+              + decomp_sec[:, None, :]) * 1e3              # (N,L,K)
+    sla = np.asarray(sla_ms, np.float64)[:, None, None]
+    # inf - inf would NaN; an infinite SLA means "no target" -> zero excess
+    excess = np.where(np.isfinite(sla), np.maximum(lat_ms - sla, 0.0), 0.0)
+    return np.asarray(accesses, np.float64)[:, None, None] * excess
 
 
 def latency_feasible(

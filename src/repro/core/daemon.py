@@ -102,6 +102,9 @@ class DaemonCycleReport:
     # (MigrationPlan.land) and re-enter the candidate set next cycle —
     # spent_cents covers landed moves only, the failure cost is metered
     # separately so no move is ever double-billed
+    sla_penalty: float = 0.0          # rho-weighted excess-ms of the
+    # cycle's plan (PipelineReport.sla_penalty) — reported, never part of
+    # spent_cents/steady_cents accounting as money
     n_failed: int = 0                 # selected moves that failed to land
     retry_cents: float = 0.0          # wasted attempts of landed moves
     failed_cents: float = 0.0         # cents burned by failed moves
@@ -528,6 +531,8 @@ class ReoptimizationDaemon:
             spent_cents=spent_cents, moved_gb=gb,
             steady_cents=float(sum(m.plan.report.total_cents
                                    for m in migs)),
+            sla_penalty=float(sum(m.plan.report.sla_penalty
+                                  for m in migs)),
             max_deferral_age=max_age, n_tenants=T,
             n_failed=sum(r.n_failed for r in exec_reps),
             retry_cents=float(sum(r.retry_cents for r in exec_reps)),
@@ -632,6 +637,7 @@ class ReoptimizationDaemon:
             penalty_cents=penalty,
             spent_cents=spent,
             moved_gb=gb, steady_cents=mig.plan.report.total_cents,
+            sla_penalty=mig.plan.report.sla_penalty,
             max_deferral_age=max_age,
             installment_cents=installment_cents,
             prepaid_used_cents=prepaid_used_cents,

@@ -29,10 +29,13 @@ from typing import (Callable, Dict, FrozenSet, List, Optional, Sequence,
 import numpy as np
 
 from repro.core import datapart
+from repro.core.cache import (CacheConfig, cache_access_adjustment,
+                              cache_cents, forecast_admission,
+                              served_latency_terms, weighted_p99_ms)
 from repro.core.stream import QueryFamilies, StreamingPartitioner
 from repro.core.costs import (CostTable, Weights, cost_tensor,
                               early_delete_penalty_gb, latency_feasible,
-                              move_egress_cents_gb)
+                              move_egress_cents_gb, sla_penalty_tensor)
 from repro.core.optassign import (Assignment, capacitated_assign,
                                   greedy_assign, lock_schemes)
 from repro.data.tables import Table
@@ -59,6 +62,13 @@ class ScopeConfig:
     predictor: str = "truth"                 # 'truth' | fitted CompressionPredictor
     feature_backend: str = "numpy"           # 'numpy' | 'jnp' | 'pallas'
     fixed_tier: Optional[int] = None         # e.g. 0 -> 'store on premium'
+    # ---- serving SLA (soft constraints; see docs/engine.md) -------------
+    sla_lambda: float = 0.0                  # objective = cost + lambda*penalty
+    sla_ms: float = np.inf                   # default per-partition SLA target
+    # (per-partition overrides via PlacementProblem.sla_ms; inf = no target)
+    cache: Optional[CacheConfig] = None      # optional serving cache tier
+    replicas: int = 1                        # copies for hot partitions
+    replica_rho_min: float = np.inf          # replicate when rho >= this
 
 
 @dataclasses.dataclass
@@ -77,6 +87,13 @@ class PipelineReport:
     schemes: Sequence[str]
     provider_scheme: Optional[List[int]] = None  # partitions per provider
     # (multi-cloud tables only; None for single-cloud)
+    # ---- serving metrics (SLA/cache; zero when the features are off) ----
+    sla_penalty: float = 0.0          # rho-weighted excess ms — NOT cents,
+    # never metered by BillingMeter; lambda-weighted only inside the solver
+    p99_latency_ms: float = 0.0       # access-weighted p99 serving latency
+    cache_cents: float = 0.0          # cache storage + fill spend (real cents,
+    # included in total_cents when a cache tier is configured)
+    n_cached: int = 0                 # partitions admitted to the cache
 
 
 @dataclasses.dataclass
@@ -104,10 +121,23 @@ class PlacementProblem:
     cfg: ScopeConfig
     partitions: Optional[List[datapart.Partition]] = None
     raw_bytes: Optional[List[bytes]] = None
+    sla_ms: Optional[np.ndarray] = None  # (N,) per-partition SLA targets;
+    # None -> broadcast cfg.sla_ms (inf = no target, zero penalty)
 
     @property
     def n(self) -> int:
         return int(self.spans_gb.shape[0])
+
+    def effective_sla_ms(self) -> np.ndarray:
+        """(N,) SLA targets: the per-partition override or the config
+        default broadcast. ``inf`` rows contribute exactly zero penalty."""
+        if self.sla_ms is not None:
+            sla = np.asarray(self.sla_ms, np.float64)
+            if sla.shape != (self.n,):
+                raise ValueError(f"sla_ms must have shape ({self.n},), "
+                                 f"got {sla.shape}")
+            return sla
+        return np.full(self.n, float(self.cfg.sla_ms))
 
     def stored_matrix(self) -> np.ndarray:
         """(N,L,K) GB occupied if cell (l,k) is chosen (tier-independent)."""
@@ -203,26 +233,51 @@ class MigrationPlan:
 
     def steady_savings_cents(self, months: Optional[float] = None,
                              ) -> np.ndarray:
-        """(N,) steady-state cents each candidate move saves over ``months``
-        (default: the plan's ``cfg.months`` horizon) — old cell minus new
-        cell under the plan's access rates. The daemon's knapsack numerator.
+        """(N,) steady-state savings each candidate move yields over
+        ``months`` (default: the plan's ``cfg.months`` horizon) — old cell
+        minus new cell under the plan's access rates. The daemon's knapsack
+        numerator.
+
+        With a serving SLA configured (``cfg.sla_lambda > 0``) the savings
+        additionally include the lambda-weighted latency-penalty relief of
+        the move, so SLA-violation moves compete in the same
+        savings-per-cent knapsack as pure cost moves. The relief is an
+        *objective* quantity (lambda * excess-ms), not cents — what gets
+        **spent** on a move (``move_transfer/egress/penalty_cents``) stays
+        pure cents either way. With a cache tier, admitted partitions'
+        backing traffic is their miss traffic only.
         """
         p = self.plan.problem
         t = p.table
-        m = p.cfg.months if months is None else float(months)
+        cfg = p.cfg
+        m = cfg.months if months is None else float(months)
         n = np.arange(p.n)
         old_l = np.maximum(self.old_tier, 0)
         old_k = np.maximum(self.old_scheme, 0)
         new_l, new_k = self.new_tier.astype(int), self.new_scheme.astype(int)
 
+        rho_eff = p.rho
+        if cfg.cache is not None:
+            cached = forecast_admission(p.rho, p.spans_gb, cfg.cache)
+            rho_eff = np.where(cached, cfg.cache.miss_rate * p.rho, p.rho)
+
         def cell(stored, l, k):
             return (stored * t.storage_cents_gb_month[l] * m
-                    + p.rho * (stored * t.read_cents_gb[l]
-                               + p.D[n, k] * t.compute_cents_sec))
+                    + rho_eff * (stored * t.read_cents_gb[l]
+                                 + p.D[n, k] * t.compute_cents_sec))
 
         new_stored = p.spans_gb / p.R[n, new_k]
         sav = cell(self.old_stored_gb, old_l, old_k) \
             - cell(new_stored, new_l, new_k)
+        if cfg.sla_lambda > 0:
+            sla = p.effective_sla_ms()
+            if bool(np.isfinite(sla).any()):
+                def excess(l, k):
+                    lat = (t.ttfb_seconds[l] + p.D[n, k]) * 1e3
+                    return np.where(np.isfinite(sla),
+                                    np.maximum(lat - sla, 0.0), 0.0)
+                sav = sav + cfg.sla_lambda * rho_eff * (
+                    excess(old_l, old_k) - excess(new_l, new_k))
         return np.where(self.candidate, sav, 0.0)
 
     def select(self, keep: np.ndarray) -> "MigrationPlan":
@@ -275,6 +330,53 @@ class MigrationPlan:
         if not bool((unapplied & self.moved).any()):
             return self
         return self.select(self.moved & ~unapplied)
+
+
+@dataclasses.dataclass
+class ReplicaPlan:
+    """K-replica placement for read locality (hot partitions only).
+
+    Extra copies of a partition are placed on *distinct providers* (or
+    distinct tiers, for single-cloud tables) so reads can be served by the
+    closest/fastest copy; each of a partition's ``copies`` serves ``1 /
+    copies`` of its reads. Produced by
+    :meth:`PlacementEngine.plan_replicas`.
+    """
+
+    copies: np.ndarray                # (N,) total copies actually placed
+    replica_tier: np.ndarray          # (N, R-1) int; -1 = no copy
+    replica_scheme: np.ndarray        # (N, R-1) int; -1 = no copy
+    replica_cents: float              # storage + ingestion write + the read
+    # share the replicas serve — real cents
+    read_rebate_cents: float          # primary access cents now served by
+    # replicas instead (subtract from the base report when combining)
+    best_latency_ms: np.ndarray       # (N,) fastest copy's backing latency
+
+    @property
+    def n_replicated(self) -> int:
+        return int((self.copies > 1).sum())
+
+    def latency_points(self, problem: "PlacementProblem",
+                       assignment: Assignment,
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Serving-latency distribution with reads split across copies:
+        ``(latency_ms_points, access_weights)`` for
+        :func:`repro.core.cache.weighted_p99_ms`."""
+        t = problem.table
+        n = np.arange(problem.n)
+        pts = [(t.ttfb_seconds[assignment.tier.astype(int)]
+                + problem.D[n, assignment.scheme.astype(int)]) * 1e3]
+        wts = [problem.rho / self.copies]
+        for j in range(self.replica_tier.shape[1]):
+            l_j = self.replica_tier[:, j]
+            k_j = self.replica_scheme[:, j]
+            has = l_j >= 0
+            safe_l, safe_k = np.maximum(l_j, 0), np.maximum(k_j, 0)
+            pts.append(np.where(
+                has, (t.ttfb_seconds[safe_l] + problem.D[n, safe_k]) * 1e3,
+                0.0))
+            wts.append(np.where(has, problem.rho / self.copies, 0.0))
+        return np.concatenate(pts), np.concatenate(wts)
 
 
 # ------------------------------------------------------------------ stages
@@ -380,6 +482,53 @@ class AssignStage:
         self.table = table
         self.cfg = cfg
 
+    def serving_terms(self, problem: PlacementProblem,
+                      ) -> Tuple[Optional[np.ndarray],
+                                 Optional[np.ndarray]]:
+        """``(cached, serving_cost)`` — the SLA + cache extension of the
+        objective, as one additive (N,L,K) tensor.
+
+        ``cached`` is the forecast-driven cache admission mask (None
+        without a cache tier). The rho the solve sees is already the
+        projected rate when a forecaster is attached, so admission is
+        forecast-driven with zero extra plumbing. ``serving_cost`` is
+        ``sla_lambda * penalty + cache access relief``; it is **None**
+        whenever ``sla_lambda == 0`` and no cache tier is configured, so
+        the default config leaves every solver input byte-identical to the
+        pre-SLA engine (the bit-parity pin).
+        """
+        cfg = self.cfg
+        cached = None
+        extra = None
+        if cfg.cache is not None:
+            cached = forecast_admission(problem.rho, problem.spans_gb,
+                                        cfg.cache)
+            extra = cache_access_adjustment(
+                problem.rho, problem.stored_matrix(), problem.D, self.table,
+                cfg.weights, cached, cfg.cache.miss_rate)
+        if cfg.sla_lambda > 0:
+            sla = problem.effective_sla_ms()
+            if bool(np.isfinite(sla).any()):
+                pen = sla_penalty_tensor(problem.rho, sla, problem.D,
+                                         self.table)
+                if cached is not None:
+                    # Admitted rows serve (1 - miss_rate) of reads at the
+                    # cache hit latency: the backing-tier penalty scales to
+                    # the miss traffic, plus a tier-independent term for
+                    # hits that still miss an (aggressive) SLA target.
+                    m = cfg.cache.miss_rate
+                    hit_ex = np.where(
+                        np.isfinite(sla),
+                        np.maximum(cfg.cache.hit_latency_ms - sla, 0.0),
+                        0.0)
+                    hit_pen = ((1.0 - m) * problem.rho
+                               * hit_ex)[:, None, None]
+                    pen = np.where(cached[:, None, None],
+                                   m * pen + hit_pen, pen)
+                lam_pen = cfg.sla_lambda * pen
+                extra = lam_pen if extra is None else extra + lam_pen
+        return cached, extra
+
     def cost_and_feasibility(
         self, problem: PlacementProblem,
         extra_cost: Optional[np.ndarray] = None,      # (N,L,K) additive
@@ -392,6 +541,9 @@ class AssignStage:
                            months=cfg.months)
         if extra_cost is not None:
             cost = cost + extra_cost
+        _, serving = self.serving_terms(problem)
+        if serving is not None:
+            cost = cost + serving
         feas = latency_feasible(problem.D, np.full(N, cfg.latency_sla_sec),
                                 table)
         if cfg.tier_whitelist is not None:
@@ -471,13 +623,37 @@ class BillingStage:
         stored = problem.spans_gb / problem.R[n_idx, k]
         d_sec = problem.D[n_idx, k]
         rho = problem.rho
+        # Cache tier: admitted partitions only hit the backing tier on a
+        # miss, and the cache's own storage/fill spend is real cents. The
+        # admission mask is a pure function of (problem, cfg) — the same
+        # mask the solver priced — so select()-re-billing stays consistent.
+        cached = None
+        cache_spend = 0.0
+        rho_b = rho                       # backing-tier read traffic
+        if cfg.cache is not None:
+            cached = forecast_admission(rho, problem.spans_gb, cfg.cache)
+            rho_b = np.where(cached, cfg.cache.miss_rate * rho, rho)
+            cache_spend = cache_cents(problem.spans_gb, cached, cfg.cache,
+                                      cfg.months)
         storage = float((stored * t.storage_cents_gb_month[l]).sum()
                         * cfg.months)
-        read = float((rho * stored * t.read_cents_gb[l]).sum())
-        decomp = float((rho * d_sec).sum() * t.compute_cents_sec)
+        read = float((rho_b * stored * t.read_cents_gb[l]).sum())
+        decomp = float((rho_b * d_sec).sum() * t.compute_cents_sec)
         rho_tot = float(rho.sum())
         ttfb_acc = float((rho * t.ttfb_seconds[l]).sum())
         dlat_acc = float((rho * d_sec).sum())
+        # Serving-latency metrics: raw penalty units and p99 — reported,
+        # never billed (BillingMeter cents fields stay latency-free).
+        lat_ms = (t.ttfb_seconds[l] + d_sec) * 1e3
+        pts, w = served_latency_terms(rho, lat_ms, cached,
+                                      cfg.cache if cached is not None
+                                      else None)
+        sla = problem.effective_sla_ms()
+        sla_pts = np.concatenate([sla, sla]) if cached is not None else sla
+        excess = np.where(np.isfinite(sla_pts),
+                          np.maximum(pts - sla_pts, 0.0), 0.0)
+        sla_penalty = float((w * excess).sum())
+        p99 = weighted_p99_ms(pts, w)
         counts = np.bincount(l[l >= 0], minlength=t.num_tiers)
         prov = getattr(t, "provider_of_tier", None)
         provider_scheme = None
@@ -487,13 +663,16 @@ class BillingStage:
             provider_scheme = [int(c) for c in pc]
         return PipelineReport(
             storage_cents=storage, decomp_cents=decomp, read_cents=read,
-            total_cents=storage + decomp + read,
+            total_cents=storage + decomp + read + cache_spend,
             read_latency_ttfb=ttfb_acc / max(rho_tot, 1e-12),
             decomp_latency_ms=1e3 * dlat_acc / max(rho_tot, 1e-12),
             tiering_scheme=[int(c) for c in counts],
             n_partitions=problem.n, assignment=assignment,
             spans_gb=problem.spans_gb, rho=rho, schemes=problem.schemes,
-            provider_scheme=provider_scheme)
+            provider_scheme=provider_scheme,
+            sla_penalty=sla_penalty, p99_latency_ms=p99,
+            cache_cents=cache_spend,
+            n_cached=int(cached.sum()) if cached is not None else 0)
 
 
 # ------------------------------------------------------------------ engine
@@ -522,6 +701,149 @@ class PlacementEngine:
     def run(self, parts: List[datapart.Partition],
             file_rows: Dict[str, Tuple[Table, np.ndarray]]) -> PlacementPlan:
         return self.solve(self.build_problem(parts, file_rows))
+
+    # ----------------------------------------------------------- replicas
+    def plan_replicas(self, plan: PlacementPlan,
+                      n_copies: Optional[np.ndarray] = None) -> ReplicaPlan:
+        """Place extra read-locality copies of hot partitions.
+
+        ``n_copies`` is the per-partition total copy count (primary
+        included); by default partitions with ``rho >= cfg.replica_rho_min``
+        get ``cfg.replicas`` copies and everything else one. Each extra
+        copy is one additional **placement row** solved through the same
+        cost tensor / solver as the primary: ingestion write + storage at
+        the candidate tier plus the ``rho / copies`` read share it will
+        serve, with the primary's compression scheme locked (replicas store
+        the same encoded payload). Feasibility excludes every provider
+        already hosting a copy (multi-cloud) or every tier already hosting
+        one (single-cloud), so copies are placement-diverse by
+        construction; replica passes respect residual per-tier capacities
+        when ``cfg.capacity_gb`` is set. A partition whose remaining
+        feasible set is empty simply gets fewer copies.
+
+        The returned cents are additive bookkeeping against the base
+        report: ``plan.report.total_cents - read_rebate_cents +
+        replica_cents`` is the combined steady bill (the rebate is the
+        share of the primary's access cost the replicas now serve).
+        """
+        prob = plan.problem
+        cfg, t = self.cfg, self.table
+        N = prob.n
+        L = t.num_tiers
+        if n_copies is None:
+            want = np.where(prob.rho >= cfg.replica_rho_min,
+                            max(int(cfg.replicas), 1), 1)
+        else:
+            want = np.maximum(np.asarray(n_copies, int), 1)
+        rmax = int(want.max()) if N else 1
+        prim_l = plan.assignment.tier.astype(int)
+        prim_k = plan.assignment.scheme.astype(int)
+        rep_tier = np.full((N, max(rmax - 1, 0)), -1, int)
+        rep_scheme = np.full((N, max(rmax - 1, 0)), -1, int)
+        copies = np.ones(N, int)
+        if rmax <= 1 or N == 0:
+            n_idx = np.arange(N)
+            lat0 = (t.ttfb_seconds[np.maximum(prim_l, 0)]
+                    + prob.D[n_idx, np.maximum(prim_k, 0)]) * 1e3
+            return ReplicaPlan(copies, rep_tier, rep_scheme, 0.0, 0.0, lat0)
+
+        prov = getattr(t, "provider_of_tier", None)
+        used = np.zeros((N, L), bool)          # blocked tiers per partition
+        safe_pl = np.maximum(prim_l, 0)
+        if prov is None:
+            used[np.arange(N), safe_pl] = True
+        else:
+            used = np.asarray(prov)[None, :] == np.asarray(prov)[safe_pl][:, None]
+
+        # residual per-tier capacity, aged by the primaries + prior passes
+        cap = (np.asarray(cfg.capacity_gb, np.float64).copy()
+               if cfg.capacity_gb is not None else None)
+        if cap is not None:
+            usage = np.zeros(L)
+            np.add.at(usage, safe_pl, plan.stored_gb)
+            cap = cap - usage
+        # replica rows must not re-trigger cache admission (the cache holds
+        # one serving copy, fed by whichever replica is closest)
+        cfg2 = dataclasses.replace(cfg, cache=None, capacity_gb=None)
+        stage = AssignStage(t, cfg2)
+        rep_cents = 0.0
+        rebate = 0.0
+        n_all = np.arange(N)
+        for j in range(rmax - 1):
+            rows = np.flatnonzero(want > j + 1)
+            if rows.size == 0:
+                break
+            share = prob.rho[rows] / want[rows]
+            sub = PlacementProblem(
+                spans_gb=prob.spans_gb[rows], rho=share,
+                current_tier=np.full(rows.size, -1),
+                R=prob.R[rows], D=prob.D[rows], schemes=prob.schemes,
+                table=t, cfg=cfg2,
+                sla_ms=(prob.sla_ms[rows] if prob.sla_ms is not None
+                        else None))
+            cost, feas = stage.cost_and_feasibility(
+                sub, locked_scheme=prim_k[rows])
+            feas = feas & ~used[rows][:, :, None]
+            ok = feas.any(axis=(1, 2))
+            if not ok.any():
+                continue
+            rows = rows[ok]
+            cost, feas = cost[ok], feas[ok]
+            sub_stored = (prob.spans_gb[rows][:, None]
+                          / prob.R[rows])[:, None, :].repeat(L, 1)
+            if cap is not None:
+                asg = capacitated_assign(cost, feas, sub_stored,
+                                         np.maximum(cap, 0.0))
+                if not asg.feasible:
+                    continue
+            else:
+                asg = greedy_assign(cost, feas)
+                if not asg.feasible:
+                    continue
+            l_j = asg.tier.astype(int)
+            k_j = asg.scheme.astype(int)
+            rep_tier[rows, j] = l_j
+            rep_scheme[rows, j] = k_j
+            copies[rows] += 1
+            stored_j = prob.spans_gb[rows] / prob.R[rows, k_j]
+            # real cents only — never the lambda-weighted penalty the
+            # solver may have folded into `cost`
+            rep_cents += float(
+                (stored_j * (t.storage_cents_gb_month[l_j] * cfg.months
+                             + t.write_cents_gb[l_j])).sum()
+                + cfg.weights.beta * (share[ok] * (
+                    stored_j * t.read_cents_gb[l_j]
+                    + prob.D[rows, k_j] * t.compute_cents_sec)).sum())
+            if prov is None:
+                used[rows, l_j] = True
+            else:
+                used[rows] |= (np.asarray(prov)[None, :]
+                               == np.asarray(prov)[l_j][:, None])
+            if cap is not None:
+                np.add.at(cap, l_j, -stored_j)
+
+        # read share the replicas serve, priced at the PRIMARY's cell —
+        # that is the traffic the base report no longer has to bill
+        rep_n = copies > 1
+        if rep_n.any():
+            stored_p = prob.spans_gb / prob.R[n_all, np.maximum(prim_k, 0)]
+            prim_access = cfg.weights.beta * prob.rho * (
+                stored_p * t.read_cents_gb[safe_pl]
+                + prob.D[n_all, np.maximum(prim_k, 0)] * t.compute_cents_sec)
+            rebate = float((prim_access[rep_n]
+                            * (copies[rep_n] - 1) / copies[rep_n]).sum())
+
+        lat = (t.ttfb_seconds[safe_pl]
+               + prob.D[n_all, np.maximum(prim_k, 0)]) * 1e3
+        best = lat.copy()
+        for j in range(rep_tier.shape[1]):
+            has = rep_tier[:, j] >= 0
+            sl = np.maximum(rep_tier[:, j], 0)
+            sk = np.maximum(rep_scheme[:, j], 0)
+            lat_j = (t.ttfb_seconds[sl] + prob.D[n_all, sk]) * 1e3
+            best = np.where(has, np.minimum(best, lat_j), best)
+        return ReplicaPlan(copies, rep_tier, rep_scheme, rep_cents, rebate,
+                           best)
 
     # ------------------------------------------------------------ online path
     def reoptimize(self, plan: PlacementPlan, new_rho: np.ndarray,

@@ -292,6 +292,10 @@ class AccessForecaster:
         X = np.concatenate([np.log1p(sizes)[:, None], ages[:, None],
                             reads_win.T, writes_win.T], axis=1)
         p = self.predict_p_hot(X)
+        # stash for serving-cache admission: forecast_admission(...,
+        # p_hot=fc.last_p_hot_) gates the cache on the calibrated
+        # probability behind the projection just returned
+        self.last_p_hot_ = p
         hot_level = np.maximum(hist_max, self.hot_rho_)
         proj = (1.0 - p) * base + p * np.maximum(base, hot_level)
         cap = self.spike_mult * np.maximum(hist_max, self.hot_rho_)

@@ -608,6 +608,8 @@ def capacitated_assign(
     max_candidates: int = 16,
     tier_groups: Optional[np.ndarray] = None,       # (L,) group id per tier
     group_capacity_gb: Optional[np.ndarray] = None,  # (G,)
+    sla_penalty: Optional[np.ndarray] = None,        # (N,L,K) violation units
+    sla_lambda: float = 0.0,
 ) -> Assignment:
     """Vectorized capacitated OPTASSIGN.
 
@@ -622,7 +624,17 @@ def capacitated_assign(
     This is how per-provider capacity rows of the flattened multi-cloud
     ``(provider, tier)`` space enter the solver — each group is one
     provider's block of flat tiers.
+
+    ``sla_penalty``/``sla_lambda`` extend the objective to ``cost +
+    sla_lambda * sla_penalty`` (soft per-partition latency SLAs,
+    :func:`repro.core.costs.sla_penalty_tensor`): the weighted penalty
+    rides through the jitted Lagrangian scan, the repair, and the 1-swap
+    polish exactly like cost. ``sla_lambda=0`` (or no penalty) leaves
+    every array untouched — bit-identical to the pre-SLA solver.
     """
+    if sla_lambda and sla_penalty is not None:
+        cost = (np.asarray(cost, np.float64)
+                + float(sla_lambda) * np.asarray(sla_penalty, np.float64))
     N, L, K = cost.shape
     masked = _masked(np.asarray(cost, np.float64), feasible)
     stored = np.asarray(stored_gb, np.float64)
@@ -1051,6 +1063,8 @@ def capacitated_assign_batch(
     shared_tier_groups: Optional[np.ndarray] = None,  # (L,) fleet-wide rows
     shared_capacity_gb: Optional[np.ndarray] = None,  # (S,)
     mesh=None,
+    sla_penalties: Optional[Sequence] = None,        # T x (N_t,L,K) or None
+    sla_lambda: float = 0.0,
 ) -> FleetAssignment:
     """Solve T tenants' capacitated OPTASSIGN problems in ONE device dispatch.
 
@@ -1081,6 +1095,14 @@ def capacitated_assign_batch(
     if (shared_tier_groups is None) != (shared_capacity_gb is None):
         raise ValueError("shared_tier_groups and shared_capacity_gb must be "
                          "passed together")
+    # Soft-SLA term, exactly as in capacitated_assign: folded into the
+    # per-tenant cost tensors before padding, so the weighted penalty rows
+    # ride the batched/sharded fleet scan too. sla_lambda=0 touches nothing.
+    if sla_lambda and sla_penalties is not None:
+        costs = [c if p is None
+                 else (np.asarray(c, np.float64)
+                       + float(sla_lambda) * np.asarray(p, np.float64))
+                 for c, p in zip(costs, sla_penalties)]
     T = len(costs)
     if T == 0:
         su = (np.zeros(np.asarray(shared_capacity_gb).shape[0])

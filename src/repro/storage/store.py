@@ -33,7 +33,14 @@ class ChecksumError(StoreError):
 
 @dataclasses.dataclass
 class BillingMeter:
-    """Accrues cents, mirrors the paper's cost break-up columns."""
+    """Accrues cents, mirrors the paper's cost break-up columns.
+
+    Contract: every ``*_cents`` field is real money metered by store
+    operations. Serving-SLA latency penalties are **never** cents — they
+    live only in ``PipelineReport.sla_penalty`` (raw rho-weighted
+    excess-ms) and in the solver objective as ``sla_lambda * penalty``;
+    nothing in this meter ever accrues them (pinned by
+    ``tests/test_billing_parity.py``)."""
 
     storage_cents: float = 0.0
     read_cents: float = 0.0

@@ -149,3 +149,52 @@ def test_stream_subsets_meter_exactly():
     moves = sum(r.n_moved for r in eng.history)
     deferred = sum(r.n_deferred for r in eng.history)
     assert moves > 0 and deferred > 0     # masks actually bit both ways
+
+
+def test_sla_penalties_never_leak_into_store_meter():
+    """With a serving SLA configured (lambda > 0, finite target) the solve
+    may pick different placements — but every cent the store meters must
+    still equal the plan's own pure-money move cents, and the meter's
+    total must stay exactly the sum of its cents fields (no latency units
+    hiding anywhere in BillingMeter)."""
+    import dataclasses
+
+    table = azure_table()
+    raws = [(bytes([65 + i % 8]) * (150_000 + 40_000 * i)) for i in range(8)]
+    cfg = ScopeConfig(tier_whitelist=(0, 1, 2, 3), months=2.0,
+                      sla_lambda=3.0, sla_ms=30.0)
+    eng = PlacementEngine(table, cfg)
+    data = PartitionedData(
+        partitions=[None] * len(raws), tables=[None] * len(raws),
+        raw_bytes=raws, spans_gb=np.array([len(b) / 1e9 for b in raws]),
+        rho=np.array([0.05, 0.1, 40.0, 0.02, 800.0, 5.0, 0.5, 120.0]))
+    plan = eng.solve(CompressStage(cfg)(data, table))
+    assert plan.report.sla_penalty >= 0.0
+    rng = np.random.default_rng(3)
+    rho2 = plan.problem.rho * rng.uniform(1e-4, 1e4, plan.problem.n)
+    full = eng.reoptimize(plan, rho2, months_held=2.0)
+    for keep in [np.ones(plan.problem.n, bool),
+                 rng.random(plan.problem.n) < 0.5]:
+        sub = full.select(keep)
+        store = TieredStore(table)
+        keys = store.apply_plan(plan)
+        store.advance_months(2.0)
+        before = {f: getattr(store.meter, f) for f in _DET}
+        store.migrate(sub, keys)
+        d = {f: getattr(store.meter, f) - before[f] for f in _DET}
+        assert sum(d.values()) == pytest.approx(
+            sub.total_move_cents, rel=1e-9, abs=1e-15)
+        # the meter's grand total is the sum of its cents fields — a
+        # latency penalty folded in anywhere would break this identity
+        m = store.meter
+        assert m.total_cents == pytest.approx(
+            m.storage_cents + m.read_cents + m.write_cents + m.compute_cents
+            + m.penalty_cents + m.egress_cents, rel=1e-12)
+    # penalty units live only in the report, and never in the billed cents:
+    # billing the same assignment with lambda=0 yields identical cents
+    cfg0 = dataclasses.replace(cfg, sla_lambda=0.0)
+    from repro.core.engine import BillingStage
+    rep0 = BillingStage(table, cfg0)(
+        dataclasses.replace(plan.problem, cfg=cfg0), plan.assignment)
+    for f in ("storage_cents", "decomp_cents", "read_cents", "total_cents"):
+        assert getattr(rep0, f) == getattr(plan.report, f), f

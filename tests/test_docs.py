@@ -1,6 +1,7 @@
 """Documentation invariants: links resolve, every benchmark tag is
 documented, and the docs' worked billing example matches the code."""
 
+import os
 import pathlib
 import subprocess
 import sys
@@ -34,6 +35,41 @@ def test_every_benchmark_tag_documented_in_readme():
     readme = (ROOT / "README.md").read_text()
     for tag, _ in MODULES:
         assert f"`{tag}`" in readme, f"benchmark tag {tag} not in README.md"
+
+
+def test_every_readme_listed_tag_is_registered():
+    """Reverse direction: each tag the README's benchmark table lists must
+    be registered in benchmarks/run.py (a renamed/removed tag can't keep
+    haunting the docs)."""
+    import re
+
+    sys.path.insert(0, str(ROOT))
+    try:
+        from benchmarks.run import MODULES
+    finally:
+        sys.path.pop(0)
+    registered = {tag for tag, _ in MODULES}
+    readme = (ROOT / "README.md").read_text()
+    listed = set()
+    for line in readme.splitlines():
+        m = re.match(r"\|\s*`([^`]+)`\s*\|\s*`bench_\w+\.py`", line)
+        if m:
+            listed.add(m.group(1))
+    assert listed, "README benchmark table not found"
+    missing = sorted(listed - registered)
+    assert not missing, f"README lists unregistered benchmark tags {missing}"
+
+
+def test_unknown_benchmark_tag_exits_nonzero():
+    """--only with a bogus tag must fail loudly, not silently run nothing."""
+    env = os.environ | {"PYTHONPATH": os.pathsep.join(
+        ["src", str(ROOT), os.environ.get("PYTHONPATH", "")])}
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "nosuchtag"],
+        capture_output=True, text=True, cwd=ROOT, env=env)
+    assert r.returncode != 0
+    assert "nosuchtag" in r.stderr
+    assert "valid tags" in r.stderr and "tableII" in r.stderr
 
 
 def test_costs_doc_worked_example_matches_code():

@@ -1,6 +1,10 @@
 """Paper Fig 7 — G-PART space/cost trade-off vs no-merge and merge-all,
 plus the ordered-partition DP (Thms 5/6) vs G-PART on time-series data,
-plus the streaming sweep: amortized incremental ingest vs full rebuild."""
+plus the streaming sweep: amortized incremental ingest vs full rebuild.
+
+``g_part`` here is the array-native implementation; the throughput ladder
+against the original ``g_part_ref`` pair loop (and the sampled 1e6-file
+sweep) lives in ``bench_gpart_scale.py`` (tag ``gpart_scale``)."""
 
 import time
 

@@ -1,0 +1,109 @@
+"""Array-native G-PART scaling sweep (the DATAPART scalability tentpole).
+
+Three sections:
+
+* ``throughput`` — array-backed ``g_part`` (inverted-index candidate join +
+  vectorized heap merge) vs the original pair-by-pair ``g_part_ref`` on the
+  same instance, with an identical-result check. The acceptance bar is
+  >= 10x at N >= 2e4 query families (measured ~2 orders of magnitude —
+  ref is quadratic in Python, the array path is near-linear in candidate
+  edges).
+* ``sampled`` — the MinHash-style row-sampled estimator at N >= 1e6 files:
+  the candidate graph never materializes anything dense, and read_cost
+  stays within 1.1x of the exact merge on the largest instance where the
+  exact sweep is feasible.
+* ``matrix`` — one batched fractional-overlap matrix dispatch
+  (``kernels/overlap.py`` via the 'ref' jnp oracle on CPU; 'pallas' on
+  TPU) at moderate N, the device-resident candidate path.
+
+Set ``BENCH_SMOKE=1`` to shrink to a seconds-long CI smoke run.
+"""
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, row, timed
+from repro.core import datapart as dp
+
+SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0")))
+
+
+def _instance(n_fams, n_files, seed=0):
+    """Contiguous-window query families over a shared file universe (the
+    same §VI-B structure bench_gpart streams)."""
+    rng = np.random.default_rng(seed)
+    sizes = {f"s{i}": float(rng.uniform(0.5, 2.0)) for i in range(n_files)}
+    w = rng.integers(2, 9, n_fams)
+    lo = rng.integers(0, n_files - 9, n_fams)
+    qf = [(tuple(f"s{j}" for j in range(lo[k], lo[k] + w[k])),
+           float(rng.uniform(0.5, 8.0))) for k in range(n_fams)]
+    return dp.make_partitions(qf, sizes)
+
+
+def _canon(parts):
+    return sorted((tuple(sorted(p.files)), round(p.rho, 9)) for p in parts)
+
+
+def run():
+    rows = []
+
+    # ------------------------------------------------ array vs ref throughput
+    ladder = ((1_000, 2_000), (2_000, 2_000)) if SMOKE else \
+        ((2_000, 2_000), (20_000, 2_000))
+    for n_fams, _ in ladder:
+        parts = _instance(n_fams, n_fams * 20)
+        arr, us_arr = timed(lambda p=parts: dp.g_part(list(p), s_thresh=15.0),
+                            repeats=1)
+        ref, us_ref = timed(lambda p=parts: dp.g_part_ref(list(p),
+                                                          s_thresh=15.0),
+                            repeats=1)
+        rows.append(row(
+            f"gpart_scale/throughput/N{len(parts)}", us_arr,
+            ref_us=round(us_ref, 1),
+            speedup_vs_ref=round(us_ref / us_arr, 1),
+            identical_result=_canon(arr) == _canon(ref),
+            n_partitions=len(arr)))
+
+    # -------------------------------------- sampled estimator accuracy + scale
+    n_acc = 2_000 if SMOKE else 20_000
+    parts = _instance(n_acc, n_acc * 10, seed=1)
+    exact, us_exact = timed(lambda: dp.g_part(list(parts), s_thresh=15.0),
+                            repeats=1)
+    sampled, us_s = timed(lambda: dp.g_part(list(parts), s_thresh=15.0,
+                                            sample=0.5, max_degree=8),
+                          repeats=1)
+    rows.append(row(
+        f"gpart_scale/sampled/N{len(parts)}", us_s,
+        exact_us=round(us_exact, 1),
+        read_cost_ratio=round(dp.read_cost(sampled)
+                              / max(dp.read_cost(exact), 1e-12), 4),
+        n_partitions=len(sampled), n_partitions_exact=len(exact)))
+
+    n_files = 50_000 if SMOKE else 1_000_000
+    big = _instance(n_files * 3 // 20, n_files, seed=2)
+    t0 = time.perf_counter()
+    out = dp.g_part(list(big), s_thresh=15.0, sample=0.5, max_degree=8)
+    us_big = (time.perf_counter() - t0) * 1e6
+    rows.append(row(
+        f"gpart_scale/sampled/F{n_files}", us_big,
+        n_files=n_files, n_families=len(big), n_partitions=len(out),
+        read_cost=round(dp.read_cost(out) / 1e6, 4)))
+
+    # ------------------------------------------------- batched matrix dispatch
+    n_mat = 256 if SMOKE else 1_024
+    parts = _instance(n_mat, n_mat * 8, seed=3)
+    idx = dp.PartitionIndex.from_partitions(parts)
+    backend = "ref"   # jnp oracle; 'pallas' when a TPU is attached
+    w, us_mat = timed(lambda: np.asarray(idx.overlap_matrix(backend)),
+                      repeats=1)
+    rows.append(row(
+        f"gpart_scale/matrix/N{idx.n}", us_mat, backend=backend,
+        nnz_frac=round(float((w > 0).mean()), 4)))
+
+    return emit(rows, "gpart_scale")
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,7 @@ MODULES = [
     ("tablesV-VIII", "benchmarks.bench_compredict"),
     ("features", "benchmarks.bench_feature_backends"),
     ("fig7", "benchmarks.bench_gpart"),
+    ("gpart_scale", "benchmarks.bench_gpart_scale"),
     ("tablesIX-XI", "benchmarks.bench_scope_pipeline"),
     ("reopt", "benchmarks.bench_reoptimize"),
     ("stream", "benchmarks.bench_stream"),

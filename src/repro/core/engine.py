@@ -59,6 +59,12 @@ class ScopeConfig:
     s_thresh_mult: float = 3.0               # G-PART span cap, x median family span
     rho_c: float = 4.0
     rho_c_abs: float = 10.0
+    # G-PART candidate-graph backend: 'numpy' (exact inverted-index join),
+    # 'jnp' | 'pallas' | 'interpret' (device overlap-matrix kernel, the
+    # latter sharded over an active mesh), or 'ref' (original pair loop)
+    partition_backend: str = "numpy"
+    partition_sample: Optional[float] = None  # MinHash-style code sampling
+    # rate for the candidate graph (None = exact; see docs/engine.md)
     predictor: str = "truth"                 # 'truth' | fitted CompressionPredictor
     feature_backend: str = "numpy"           # 'numpy' | 'jnp' | 'pallas'
     fixed_tier: Optional[int] = None         # e.g. 0 -> 'store on premium'
@@ -411,8 +417,14 @@ class PartitionStage:
         cfg = self.cfg
         if cfg.use_partitioning:
             med = float(np.median([p.span for p in parts])) if parts else 0.0
+            mesh = None
+            if cfg.partition_backend in ("jnp", "pallas"):
+                from repro.distributed import ctx
+                mesh = ctx.mesh()
             merged = datapart.g_part(parts, s_thresh=cfg.s_thresh_mult * med,
-                                     rho_c=cfg.rho_c, rho_c_abs=cfg.rho_c_abs)
+                                     rho_c=cfg.rho_c, rho_c_abs=cfg.rho_c_abs,
+                                     backend=cfg.partition_backend,
+                                     sample=cfg.partition_sample, mesh=mesh)
         else:
             # paper's non-partitioned baselines treat each DATASET (table) as
             # one partition: every access scans its whole table

@@ -9,13 +9,22 @@ with the same fractional-overlap max-heap merge rule, and a family-level log
 (the "memtable of evidence") is kept alongside so :meth:`compact` can run a
 full re-merge when accumulated drift exceeds a threshold.
 
+Overlap queries route through the array-native core shared with batch
+:func:`repro.core.datapart.g_part`: files are interned once into int32
+codes (:class:`~repro.core.datapart.FileInterner`, first-seen order — the
+same assignment a batch rebuild of the concatenated log produces) and every
+edge weight comes from one vectorized one-vs-many pass over the live set
+(:class:`~repro.core.datapart._NodeStore`) instead of per-pair
+``frozenset`` intersections.
+
 Correctness contract (pinned down by ``tests/test_stream.py``):
 
 * total rho is conserved exactly by folding (merges sum rho, repeated
   families accumulate into their owning partition);
 * with no decay, no window, and compaction after every batch, the streaming
   state is **exactly** batch ``g_part`` on the concatenated log — compaction
-  replays Algorithm 1 over the family log with identical heap tie-breaking;
+  replays Algorithm 1 over the family log with identical heap tie-breaking,
+  and the shared store makes the weights bit-identical, not just equal-order;
 * between compactions the objective (``datapart.read_cost``) tracks the
   batch answer within a drift-bounded tolerance.
 
@@ -33,8 +42,10 @@ import heapq
 from typing import (Deque, Dict, FrozenSet, List, Optional, Sequence, Tuple,
                     Union)
 
-from repro.core.datapart import (FileSizes, Partition, feasible_pair,
-                                 fractional_overlap)
+import numpy as np
+
+from repro.core.datapart import (FileInterner, FileSizes, Partition,
+                                 _feasible_mask, _NodeStore, feasible_pair)
 
 QueryFamilies = Sequence[Tuple[Tuple[str, ...], float]]
 
@@ -105,6 +116,12 @@ class StreamingPartitioner:
         self._owner: Dict[FrozenSet[str], int] = {}     # family -> live id
         self._owned: Dict[int, List[FrozenSet[str]]] = {}  # live id -> families
         self._next_id = 0
+        # the array-native mirror of _live: same node ids, int32 code rows,
+        # spans/rho — all edge weights come from here, one vectorized
+        # one-vs-many pass per query instead of per-pair frozenset math
+        self._interner = FileInterner()
+        self._store = _NodeStore(self._interner)
+        self._codes: Dict[FrozenSet[str], np.ndarray] = {}  # family codes
         # merge products at/over the span cap: Algorithm 1 never pushes new
         # edges from them, and no later-arriving node may link to them either
         # (in batch, a family node only ever has edges to its coevals) — the
@@ -165,11 +182,13 @@ class StreamingPartitioner:
             if owner is not None:
                 p = self._live[owner]
                 self._live[owner] = Partition(p.files, p.rho + rho, p.sizes)
+                self._store.rho[owner] = p.rho + rho
                 touched.append(owner)
             else:
                 nid = self._next_id
                 self._next_id += 1
                 self._live[nid] = Partition(key, rho, self.sizes)
+                self._store.add(nid, self._family_codes(key), rho)
                 self._owner[key] = nid
                 self._owned[nid] = [key]
                 new_ids.append(nid)
@@ -180,12 +199,19 @@ class StreamingPartitioner:
             self.stats.n_fold_merges += self._merge(self._seed_edges(seeds))
         return self.partitions
 
+    def _family_codes(self, key: FrozenSet[str]) -> np.ndarray:
+        codes = self._codes.get(key)
+        if codes is None:
+            codes = self._codes[key] = self._interner.codes_of(key, self.sizes)
+        return codes
+
     def _apply_decay(self) -> None:
         d = self.decay
         for key in self._families:
             self._families[key] *= d
         for i, p in self._live.items():
             self._live[i] = Partition(p.files, p.rho * d, p.sizes)
+            self._store.rho[i] = p.rho * d
         for hist in self._history:
             for key in hist:
                 hist[key] *= d
@@ -206,11 +232,25 @@ class StreamingPartitioner:
                 owner = self._owner.get(key)
                 if owner is not None:
                     p = self._live[owner]
-                    self._live[owner] = Partition(
-                        p.files, max(p.rho - take, 0.0), p.sizes)
+                    new_rho = max(p.rho - take, 0.0)
+                    self._live[owner] = Partition(p.files, new_rho, p.sizes)
+                    self._store.rho[owner] = new_rho
                 self._rho_drift += take
 
     # ---------------------------------------------------------- merge machinery
+    def _push_from(self, heap: List[Tuple[float, int, int]], i: int,
+                   targets: List[int]) -> None:
+        """Push every feasible positive-overlap edge (i, t) — one vectorized
+        weight pass through the shared store."""
+        if not targets:
+            return
+        w, rho_o = self._store.weights_against(i, targets)
+        ok = (w > 0.0) & _feasible_mask(self._store.rho[i], rho_o,
+                                        self.rho_c, self.rho_c_abs)
+        for t in np.flatnonzero(ok):
+            k = targets[t]
+            heapq.heappush(heap, (-float(w[t]), min(i, k), max(i, k)))
+
     def _seed_edges(self, seeds: Sequence[int]) -> List[Tuple[float, int, int]]:
         """Heap edges from each seed node to every live partner (the bounded
         local neighbourhood a fold has to consider)."""
@@ -219,29 +259,20 @@ class StreamingPartitioner:
         for i in seeds:
             if i in self._sealed:
                 continue
-            pi = self._live[i]
-            for j, pj in self._live.items():
-                if j == i or (j in seed_set and j < i) or j in self._sealed:
-                    continue  # both-seed pairs pushed once (from the smaller id)
-                if not feasible_pair(pi, pj, self.rho_c, self.rho_c_abs):
-                    continue
-                w = fractional_overlap(pi, pj)
-                if w > 0.0:
-                    heapq.heappush(heap, (-w, min(i, j), max(i, j)))
+            # both-seed pairs pushed once (from the smaller id)
+            targets = [j for j in self._live
+                       if j != i and j not in self._sealed
+                       and not (j in seed_set and j < i)]
+            self._push_from(heap, i, targets)
         return heap
 
     def _all_edges(self) -> List[Tuple[float, int, int]]:
-        """All-pairs edges in Algorithm 1's exact construction order."""
+        """All-pairs edges — Algorithm 1's construction, one vectorized
+        row per node instead of a Python pair loop."""
         heap: List[Tuple[float, int, int]] = []
         ids = list(self._live)
         for a_i in range(len(ids)):
-            pi = self._live[ids[a_i]]
-            for b_i in range(a_i + 1, len(ids)):
-                pj = self._live[ids[b_i]]
-                if feasible_pair(pi, pj, self.rho_c, self.rho_c_abs):
-                    w = fractional_overlap(pi, pj)
-                    if w > 0.0:
-                        heapq.heappush(heap, (-w, ids[a_i], ids[b_i]))
+            self._push_from(heap, ids[a_i], ids[a_i + 1:])
         return heap
 
     def _merge(self, heap: List[Tuple[float, int, int]]) -> int:
@@ -249,6 +280,7 @@ class StreamingPartitioner:
         ``datapart.g_part`` so compaction reproduces it bit-for-bit."""
         n_merges = 0
         dead: set = set()
+        store = self._store
         while heap:
             _, i, j = heapq.heappop(heap)
             if i in dead or j in dead:
@@ -262,23 +294,17 @@ class StreamingPartitioner:
             mid = self._next_id
             self._next_id += 1
             self._live[mid] = merged
+            store.merge(i, j, mid)
             fams = self._owned.pop(i, []) + self._owned.pop(j, [])
             self._owned[mid] = fams
             for key in fams:
                 self._owner[key] = mid
             n_merges += 1
-            if merged.span >= self.s_thresh:
+            if store.span[mid] >= self.s_thresh:
                 self._sealed.add(mid)
             else:
-                pm = merged
-                for k, pk in self._live.items():
-                    if k == mid:
-                        continue
-                    if not feasible_pair(pm, pk, self.rho_c, self.rho_c_abs):
-                        continue
-                    w = fractional_overlap(pm, pk)
-                    if w > 0.0:
-                        heapq.heappush(heap, (-w, min(mid, k), max(mid, k)))
+                self._push_from(heap, mid,
+                                [k for k in self._live if k != mid])
         return n_merges
 
     # --------------------------------------------------------------- compact
@@ -296,8 +322,10 @@ class StreamingPartitioner:
         self._owner = {}
         self._owned = {}
         self._sealed = set()
+        self._store = _NodeStore(self._interner)
         for i, (key, rho) in enumerate(self._families.items()):
             self._live[i] = Partition(key, rho, self.sizes)
+            self._store.add(i, self._family_codes(key), rho)
             self._owner[key] = i
             self._owned[i] = [key]
         self._next_id = len(self._families)

@@ -9,38 +9,17 @@ Model code stays mesh-agnostic; launch code activates a mesh here (inside
 from __future__ import annotations
 
 import contextlib
-import inspect
 from typing import Optional, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P
 
+# Version-drift shims live in repro.compat (the consolidated home);
+# re-exported here because every distribution-aware call site already
+# imports them as ctx.mesh_context / ctx.shard_map.
+from repro.compat import mesh_context, shard_map  # noqa: F401
+
 _MESH = None
-
-
-def mesh_context(mesh):
-    """``jax.set_mesh`` on new jax; on older versions the Mesh object itself
-    is the (legacy global-mesh) context manager with the same effect."""
-    if hasattr(jax, "set_mesh"):
-        return jax.set_mesh(mesh)
-    return mesh
-
-
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
-    """``jax.shard_map`` on new jax, the experimental module on older jax.
-    The replication-check kwarg is picked from the target's signature
-    (``check_rep`` was renamed ``check_vma`` independently of the function's
-    promotion out of jax.experimental)."""
-    if hasattr(jax, "shard_map"):
-        sm = jax.shard_map
-    else:
-        from jax.experimental.shard_map import shard_map as sm
-    kw = {}
-    if check_vma is not None:
-        params = inspect.signature(sm).parameters
-        kw = {"check_vma" if "check_vma" in params else "check_rep":
-              check_vma}
-    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
 @contextlib.contextmanager

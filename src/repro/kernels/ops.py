@@ -104,6 +104,30 @@ def weighted_entropy_features(codes, n_valid, n_rows, n_cols, lengths, *,
         codes, n_valid, n_rows, n_cols, lengths, n_buckets=n_buckets)
 
 
+# --------------------------------------------------------- overlap (DATAPART)
+def fractional_overlap_matrix(codes, sizes, spans, *, codes_b=None,
+                              spans_b=None, block_f: int = 512,
+                              impl: str = "auto"):
+    """Batched G-PART fractional-overlap matrix (see kernels/overlap.py).
+
+    'ref'/'jnp' is the vmapped-jnp oracle, 'numpy' the host fallback;
+    'pallas'/'interpret' run the blocked one-hot-matmul grid kernel.
+    Returns (NA, NB) f32."""
+    from repro.kernels import overlap as ok
+    mode = _resolve(impl)
+    if mode == "jnp":        # engine backend names alias the jnp oracle
+        mode = "ref"
+    if mode in ("pallas", "interpret"):
+        return ok.fractional_overlap_matrix(
+            codes, sizes, spans, codes_b=codes_b, spans_b=spans_b,
+            block_f=block_f, interpret=(mode == "interpret"))
+    if mode == "numpy":
+        return ok.fractional_overlap_matrix_np(
+            codes, sizes, spans, codes_b=codes_b, spans_b=spans_b)
+    return ok.fractional_overlap_matrix_ref(
+        codes, sizes, spans, codes_b=codes_b, spans_b=spans_b)
+
+
 # ------------------------------------------------------------------- quant8
 def quant_pack(x, *, block: int = 256, impl: str = "auto"):
     mode = _resolve(impl)

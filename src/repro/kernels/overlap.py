@@ -1,0 +1,202 @@
+"""DATAPART fractional-overlap matrix kernels (paper §VI, G-PART edges).
+
+G-PART's candidate graph needs, for every partition pair (i, j), the span
+of their file intersection. On device this is a blocked one-hot matmul:
+a (block_i, block_f) slab carrying *file sizes* at partition i's code
+columns, against the transpose of a (block_j, block_f) *indicator* slab
+for partition j — their product is exactly
+``sum(sizes[c] for c in codes_i & codes_j)`` and rides the MXU. The file
+axis is the innermost sequential grid dimension, accumulating into a
+(block_i, block_j) VMEM scratch (same init/finalize structure as
+``kernels/entropy_features.py``); ``-1`` pad codes match no file column,
+which is the whole ragged-masking story.
+
+Three implementations, dispatched through
+:func:`repro.kernels.ops.fractional_overlap_matrix`:
+
+* :func:`fractional_overlap_matrix` — the Pallas TPU kernel (or interpret
+  mode on CPU);
+* :func:`fractional_overlap_matrix_ref` — vmapped-jnp oracle (scatter-add
+  one-hot rows, one einsum);
+* :func:`fractional_overlap_matrix_np` — numpy fallback, also the shape
+  oracle for the host-side blocked sweep in
+  ``repro.core.datapart.PartitionIndex.overlap_matrix``.
+
+All three accept an optional second operand (``codes_b``/``spans_b``) so a
+row block can sweep against the full set — the rectangular form the
+sharded path (``repro.core.datapart._overlap_matrix_sharded``) shards over
+devices. Weights are finalized outside the kernel:
+``w = inter / (span_a + span_b - inter)`` with an exact 0 wherever the
+intersection is empty (``inter == 0`` propagates — no fp residue can link
+disjoint partitions, the PYTHONHASHSEED bug class from PR 2).
+
+Scale note: the dense (N, N) sweep is for moderate N (device dispatch
+instead of N^2 Python). For N >= 1e6 files use
+``PartitionIndex.candidate_pairs`` (inverted-index join / MinHash-style
+row sampling) — that path never materializes a matrix.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _finalize_weights(inter, spans_a, spans_b):
+    """inter -> fractional overlap; exact 0 for empty intersections."""
+    den = spans_a[:, None] + spans_b[None, :] - inter
+    return jnp.where(inter > 0.0, inter / jnp.maximum(den, 1e-12), 0.0)
+
+
+# ------------------------------------------------------------ pallas kernel
+def _overlap_kernel(ca_ref, sa_ref, cb_ref, out_ref, acc_scr, *,
+                    block_f: int, m: int):
+    """Grid (i block, j block, file block); file axis sequential."""
+    fi = pl.program_id(2)
+    nf = pl.num_programs(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ca = ca_ref[...]                                   # (bi, m) int32
+    sa = sa_ref[...]                                   # (bi, m) f32
+    cb = cb_ref[...]                                   # (bj, m) int32
+    cols = fi * block_f + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_f), 1)
+
+    def one_hot(codes, weights, rows):
+        """Sum over code positions of (code == file column) slabs — each
+        code lands in exactly one file block; -1 pads land in none."""
+        def body(mm, acc):
+            c = jax.lax.dynamic_slice_in_dim(codes, mm, 1, 1)    # (rows, 1)
+            eq = (c == cols).astype(jnp.float32)
+            if weights is not None:
+                eq *= jax.lax.dynamic_slice_in_dim(weights, mm, 1, 1)
+            return acc + eq
+        return jax.lax.fori_loop(
+            0, m, body, jnp.zeros((rows, block_f), jnp.float32))
+
+    oh_a = one_hot(ca, sa, ca.shape[0])                # sizes at i's codes
+    oh_b = one_hot(cb, None, cb.shape[0])              # indicator for j
+    acc_scr[...] += jnp.dot(oh_a, oh_b.T,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _finalize():
+        out_ref[...] = acc_scr[...]
+
+
+def _pad_rows(codes, spans, block):
+    n = codes.shape[0]
+    pad = (-n) % block
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)), constant_values=-1)
+        spans = jnp.pad(spans, (0, pad))
+    return codes, spans
+
+
+def fractional_overlap_matrix(codes, sizes, spans, *, codes_b=None,
+                              spans_b=None, block_i: int = 128,
+                              block_j: int = 128, block_f: int = 512,
+                              interpret: bool = False):
+    """(NA, NB) f32 fractional-overlap matrix from ``-1``-padded code rows.
+
+    codes: (NA, M) int32 ascending file codes per partition, -1 padded
+    (``PartitionIndex.padded_codes`` layout); sizes: (F,) f32 per-code file
+    sizes; spans: (NA,) f32 partition spans. ``codes_b``/``spans_b``
+    default to the first operand (square, symmetric sweep).
+    """
+    codes = jnp.asarray(codes, jnp.int32)
+    spans = jnp.asarray(spans, jnp.float32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    if codes_b is None:
+        codes_b, spans_b = codes, spans
+    else:
+        codes_b = jnp.asarray(codes_b, jnp.int32)
+        spans_b = jnp.asarray(spans_b, jnp.float32)
+    na, nb = codes.shape[0], codes_b.shape[0]
+    m = max(codes.shape[1], codes_b.shape[1])
+    codes = jnp.pad(codes, ((0, 0), (0, m - codes.shape[1])),
+                    constant_values=-1)
+    codes_b = jnp.pad(codes_b, ((0, 0), (0, m - codes_b.shape[1])),
+                      constant_values=-1)
+    block_i = min(block_i, max(na, 1))
+    block_j = min(block_j, max(nb, 1))
+    ca, spa = _pad_rows(codes, spans, block_i)
+    cb, spb = _pad_rows(codes_b, spans_b, block_j)
+    csizes = jnp.where(ca >= 0, sizes[jnp.clip(ca, 0, None)], 0.0
+                       ).astype(jnp.float32)
+    n_f = -(-int(sizes.shape[0]) // block_f)
+    kernel = functools.partial(_overlap_kernel, block_f=block_f, m=m)
+    inter = pl.pallas_call(
+        kernel,
+        grid=(ca.shape[0] // block_i, cb.shape[0] // block_j, n_f),
+        in_specs=[pl.BlockSpec((block_i, m), lambda i, j, fi: (i, 0)),
+                  pl.BlockSpec((block_i, m), lambda i, j, fi: (i, 0)),
+                  pl.BlockSpec((block_j, m), lambda i, j, fi: (j, 0))],
+        out_specs=pl.BlockSpec((block_i, block_j), lambda i, j, fi: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ca.shape[0], cb.shape[0]),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_i, block_j), jnp.float32)],
+        interpret=interpret,
+    )(ca, csizes, cb)
+    return _finalize_weights(inter, spa, spb)[:na, :nb]
+
+
+# ------------------------------------------------------------- jnp oracle
+def fractional_overlap_matrix_ref(codes, sizes, spans, *, codes_b=None,
+                                  spans_b=None):
+    """Vmapped-jnp oracle: scatter-add each code row into a dense (F,)
+    one-hot (sizes on the A side, indicator on the B side), one matmul."""
+    codes = jnp.asarray(codes, jnp.int32)
+    spans = jnp.asarray(spans, jnp.float32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    if codes_b is None:
+        codes_b, spans_b = codes, spans
+    else:
+        codes_b = jnp.asarray(codes_b, jnp.int32)
+        spans_b = jnp.asarray(spans_b, jnp.float32)
+    F = sizes.shape[0]
+
+    def one_hot_row(row, weights):
+        valid = row >= 0
+        safe = jnp.where(valid, row, 0)
+        w = jnp.where(valid, weights[safe], 0.0)
+        return jnp.zeros(F, jnp.float32).at[safe].add(w)
+
+    oh_a = jax.vmap(lambda r: one_hot_row(r, sizes))(codes)
+    oh_b = jax.vmap(lambda r: one_hot_row(r, jnp.ones_like(sizes)))(codes_b)
+    inter = oh_a @ oh_b.T
+    return _finalize_weights(inter, spans, spans_b)
+
+
+# ------------------------------------------------------------ numpy fallback
+def fractional_overlap_matrix_np(codes, sizes, spans, *, codes_b=None,
+                                 spans_b=None):
+    """Numpy fallback with identical semantics (f64 accumulate, f32 out)."""
+    codes = np.asarray(codes, np.int64)
+    spans = np.asarray(spans, np.float64)
+    sizes = np.asarray(sizes, np.float64)
+    if codes_b is None:
+        codes_b, spans_b = codes, spans
+    else:
+        codes_b = np.asarray(codes_b, np.int64)
+        spans_b = np.asarray(spans_b, np.float64)
+    F = sizes.shape[0]
+
+    def one_hot(cs, weights):
+        oh = np.zeros((cs.shape[0], F))
+        r, c = np.nonzero(cs >= 0)
+        oh[r, cs[r, c]] = weights[cs[r, c]]
+        return oh
+
+    inter = one_hot(codes, sizes) @ one_hot(codes_b, np.ones(F)).T
+    den = spans[:, None] + spans_b[None, :] - inter
+    out = np.where(inter > 0.0, inter / np.maximum(den, 1e-12), 0.0)
+    return out.astype(np.float32)

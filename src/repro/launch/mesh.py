@@ -9,17 +9,7 @@ axis over DCN. "data" carries DP (batch), "model" carries TP/EP/SP.
 
 from __future__ import annotations
 
-import jax
-
-
-def _mk(shape, axes):
-    # jax.sharding.AxisType only exists on newer jax; older versions default
-    # every mesh axis to Auto anyway.
-    axis_type = getattr(jax.sharding, "AxisType", None)
-    if axis_type is None:
-        return jax.make_mesh(shape, axes)
-    return jax.make_mesh(
-        shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+from repro.compat import make_mesh as _mk
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -122,3 +122,87 @@ def test_merge_all_baseline():
     parts = _parts_from_spec([("a", "b"), ("b", "c")], [1, 2])
     allm = dp.merge_all(parts)
     assert len(allm) == 1 and allm[0].span == 3.0 and allm[0].rho == 3.0
+
+
+# --------------------------------------------- array-native core equivalence
+def _random_instance(seed, n_parts=20, n_files=40, unit=False):
+    rng = np.random.default_rng(seed)
+    files = [f"t/{i}" for i in range(n_files)]
+    sizes = {f: 1.0 if unit else float(rng.random() * 4 + 0.25)
+             for f in files}
+    qf = []
+    for _ in range(n_parts):
+        k = int(rng.integers(1, 7))
+        fs = tuple(rng.choice(files, size=k, replace=False))
+        qf.append((fs, float(rng.random() * 9 + 0.5)))
+    return dp.make_partitions(qf, sizes)
+
+
+def _canon(parts):
+    return sorted((tuple(sorted(p.files)), round(p.rho, 9)) for p in parts)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_gpart_equals_ref(seed):
+    """The exact-equivalence pin: array-native g_part returns the SAME
+    partitions and read_cost as the original pair-by-pair g_part_ref."""
+    for unit in (True, False):
+        parts = _random_instance(seed, unit=unit)
+        med = float(np.median([p.span for p in parts]))
+        for mult in (1.5, 3.0, 10.0):
+            ref = dp.g_part_ref(parts, s_thresh=mult * med)
+            arr = dp.g_part(parts, s_thresh=mult * med, backend="numpy")
+            assert _canon(ref) == _canon(arr)
+            assert dp.read_cost(arr) == pytest.approx(dp.read_cost(ref),
+                                                      abs=1e-12)
+
+
+def test_gpart_equals_ref_device_backends():
+    """Candidate graphs from the jnp / pallas-interpret overlap matrix give
+    the same merge result (weights are recomputed in f64 either way)."""
+    parts = _random_instance(77)
+    med = float(np.median([p.span for p in parts]))
+    ref = dp.g_part_ref(parts, s_thresh=3.0 * med)
+    for backend in ("ref", "interpret"):
+        arr = dp.g_part(parts, s_thresh=3.0 * med, backend=backend)
+        assert _canon(ref) == _canon(arr)
+
+
+def test_gpart_sampled_read_cost_close():
+    """MinHash-style sampling: fewer candidate edges, read_cost within
+    1.1x of the exact merge on a moderate instance."""
+    parts = _random_instance(5, n_parts=120, n_files=150)
+    med = float(np.median([p.span for p in parts]))
+    exact = dp.read_cost(dp.g_part(parts, s_thresh=3.0 * med))
+    sampled = dp.read_cost(dp.g_part(parts, s_thresh=3.0 * med,
+                                     sample=0.6, sample_seed=0))
+    assert sampled <= exact * 1.1
+    # rho conservation holds regardless of which edges were sampled
+    tot = sum(p.rho for p in parts)
+    out = dp.g_part(parts, s_thresh=3.0 * med, sample=0.3, sample_seed=1)
+    assert sum(p.rho for p in out) == pytest.approx(tot)
+
+
+def test_filesizes_span_memoized_and_matches_index():
+    """Satellite regression: memoized FileSizes.span agrees with the
+    vectorized index path to 1e-9, and repeat lookups hit the cache."""
+    parts = _random_instance(11)
+    fs = parts[0].sizes
+    idx = dp.PartitionIndex.from_partitions(parts)
+    spans = idx.span()
+    for i, p in enumerate(parts):
+        assert fs.span(p.files) == pytest.approx(spans[i], abs=1e-9)
+    assert len(fs._span_cache) >= len({p.files for p in parts})
+    cached = fs.span(parts[0].files)
+    assert fs._span_cache[parts[0].files] == cached  # second hit, same value
+
+
+def test_index_vectorized_metrics_agree():
+    parts = _random_instance(13)
+    idx = dp.PartitionIndex.from_partitions(parts)
+    assert idx.read_cost() == pytest.approx(dp.read_cost(parts), abs=1e-9)
+    assert idx.duplication() == pytest.approx(dp.duplication(parts),
+                                              abs=1e-12)
+    assert idx.fractional_overlap(0, 1) == pytest.approx(
+        dp.fractional_overlap(parts[0], parts[1]), abs=1e-12)

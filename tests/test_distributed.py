@@ -212,3 +212,41 @@ def test_pipeline_parallel_matches_sequential():
         print("OK pipeline")
     """)
     assert "OK pipeline" in out
+
+
+def test_compat_shims_and_sharded_overlap_matrix():
+    """repro.compat consolidates the jax API-drift gates, and the G-PART
+    overlap matrix sharded over a device mesh equals the unsharded sweep."""
+    out = run_sub("""
+        import jax, numpy as np
+        from repro import compat
+        from jax.sharding import PartitionSpec as P
+        from repro.core import datapart as dp
+        from repro.launch.mesh import make_test_mesh
+
+        mesh = compat.make_mesh((4,), ("data",))
+        assert tuple(mesh.axis_names) == ("data",)
+
+        def f(x):
+            return jax.lax.psum(x, "data")
+        fn = compat.shard_map(f, mesh=mesh, in_specs=P("data"),
+                              out_specs=P("data"), check_vma=False)
+        y = fn(np.ones(4, np.float32))
+        np.testing.assert_allclose(np.asarray(y), 4.0)
+        with compat.mesh_context(mesh):
+            pass
+        print("OK compat")
+
+        rng = np.random.default_rng(0)
+        files = [f"t/{i}" for i in range(50)]
+        sizes = {f: float(rng.random() * 3 + 0.2) for f in files}
+        qf = [(tuple(rng.choice(files, size=int(rng.integers(2, 7)),
+                                replace=False)),
+               float(rng.random() * 5 + 0.5)) for _ in range(30)]
+        idx = dp.PartitionIndex.from_partitions(dp.make_partitions(qf, sizes))
+        w0 = np.asarray(idx.overlap_matrix("ref"))
+        w4 = np.asarray(idx.overlap_matrix("ref", mesh=make_test_mesh(data=4)))
+        np.testing.assert_allclose(w4, w0, rtol=1e-6, atol=1e-6)
+        print("OK sharded overlap")
+    """)
+    assert "OK compat" in out and "OK sharded overlap" in out

@@ -175,3 +175,30 @@ def test_invalid_params_rejected():
         StreamingPartitioner({"a": 1.0}, s_thresh=1.0, decay=0.0)
     with pytest.raises(ValueError):
         StreamingPartitioner({"a": 1.0}, s_thresh=1.0, window=0)
+
+
+def test_compact_equals_batch_bitwise_float_sizes():
+    """Shared-store parity: with continuous file sizes (no exact-integer
+    safety net) compacted streaming state matches batch g_part with
+    bit-identical rho — both sides compute every weight and span through
+    the same interned arrays."""
+    rng = np.random.default_rng(17)
+    files = [f"t/{i}" for i in range(60)]
+    sizes = {f: float(rng.random() * 5 + 0.1) for f in files}
+    log, batches = [], []
+    for _ in range(5):
+        batch = [(tuple(rng.choice(files, size=int(rng.integers(2, 6)),
+                                   replace=False)),
+                  float(rng.random() * 9 + 0.5)) for _ in range(10)]
+        batches.append(batch)
+        log.extend(batch)
+    spans = [dp.FileSizes(sizes).span(frozenset(f)) for f, _ in log]
+    s_thresh = 3.0 * float(np.median(spans))
+    sp = StreamingPartitioner(sizes, s_thresh=s_thresh)
+    for b in batches:
+        sp.ingest(b)
+        sp.compact(force=True)
+    ref = dp.g_part(dp.make_partitions(log, sizes), s_thresh=s_thresh)
+    a = sorted((tuple(sorted(p.files)), p.rho) for p in sp.partitions)
+    b = sorted((tuple(sorted(p.files)), p.rho) for p in ref)
+    assert a == b  # files AND rho bit-for-bit, no rounding
